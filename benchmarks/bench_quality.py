@@ -1,0 +1,48 @@
+"""Embedding-quality sanity: the paper's speedup must be numerically free.
+
+Two checks per graph:
+  1. max |Z_sparse - Z_dense| across every option setting (equivalence),
+  2. downstream vertex classification accuracy (nearest class mean) and
+     clustering ARI on SBM -- sparse and dense must agree exactly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.api import GEEEmbedder
+from repro.core.ensemble import adjusted_rand_index, gee_cluster
+from repro.core.gee import ALL_OPTION_SETTINGS, gee
+from repro.graph.sbm import sample_sbm
+
+
+def run():
+    s = sample_sbm(3000, seed=0)
+    print("equivalence across option settings (max |sparse - dense|):")
+    worst = 0.0
+    for opts in ALL_OPTION_SETTINGS:
+        zs = np.asarray(gee(s.edges, s.labels, s.num_classes, opts,
+                            backend="sparse_jax"))
+        zd = np.asarray(gee(s.edges, s.labels, s.num_classes, opts,
+                            backend="dense_jax"))
+        err = float(np.abs(zs - zd).max())
+        worst = max(worst, err)
+        print(f"  [{opts.tag()}] err={err:.2e}")
+    assert worst < 1e-4
+
+    emb = GEEEmbedder(num_classes=s.num_classes).fit(s.edges, s.labels)
+    acc = float((np.asarray(emb.predict()) == s.labels).mean())
+    res = gee_cluster(s.edges, s.num_classes, replicates=3, seed=0)
+    ari = adjusted_rand_index(np.asarray(res.labels), s.labels)
+    print(f"vertex classification acc (paper-regime SBM 3k): {acc:.3f}")
+    print(f"unsupervised clustering ARI:                     {ari:.3f}")
+    assert acc > 0.7
+    return {"equiv_err": worst, "accuracy": acc, "ari": ari}
+
+
+def main(argv=None):
+    return run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Injects generated tables into EXPERIMENTS.md (between the HTML-comment
+markers).  Run after the dry-run sweeps:
+
+  python -m benchmarks.report
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | compile | mem/dev | fits 16G | "
+            "params/dev |",
+            "|---|---|---|---|---|---|---|"]
+    for path, tag in (("results/dryrun.json", "16x16"),
+                      ("results/dryrun_multi.json", "2x16x16")):
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            recs = json.load(f)
+        for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+            mem = r.get("memory", {}).get("bytes_per_device")
+            ndev = r.get("num_devices", 1)
+            pb = r.get("param_bytes", 0) / ndev
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {tag} "
+                f"| {'ok' if r['status'] == 'ok' else 'FAIL'} "
+                f"({r.get('seconds_compile', '?')}s) "
+                f"| {mem/1e9:.1f} GB "
+                f"| {'yes' if mem and mem < 16e9 else '**no**'} "
+                f"| {pb/1e9:.2f} GB |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    from benchmarks.roofline import analyze, render_md
+
+    with open("results/dryrun.json") as f:
+        recs = json.load(f)
+    rows = [analyze(r) for r in recs if r["status"] == "ok"]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return render_md(rows)
+
+
+def inject(md_path: str, marker: str, content: str):
+    with open(md_path) as f:
+        text = f.read()
+    tag = f"<!-- {marker} -->"
+    if tag not in text:
+        print(f"marker {marker} not found")
+        return
+    # replace marker (and anything until the next header/marker is left be)
+    text = text.replace(tag, tag + "\n\n" + content + "\n", 1)
+    with open(md_path, "w") as f:
+        f.write(text)
+    print(f"injected {marker} ({content.count(chr(10))} lines)")
+
+
+def main():
+    inject("EXPERIMENTS.md", "DRYRUN_TABLE", dryrun_table())
+    inject("EXPERIMENTS.md", "ROOFLINE_TABLE", roofline_table())
+
+
+if __name__ == "__main__":
+    main()

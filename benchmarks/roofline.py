@@ -1,0 +1,146 @@
+"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, using TPU v5e constants:
+
+  compute term    = HLO_FLOPs_per_device / 197 TFLOP/s (bf16)
+  memory term     = HLO_bytes_per_device / 819 GB/s HBM
+  collective term = wire_bytes_per_device / 50 GB/s effective ICI
+
+HLO_FLOPs/bytes are the trip-count-corrected numbers from the dry-run's
+analysis pass (XLA cost analysis is while-loop-blind; see launch/dryrun.py);
+wire bytes come from the collective census over the partitioned HLO with
+ring-algorithm factors.  MODEL_FLOPS uses 6*N_active*T (train) or
+2*N_active*T (prefill/decode) -- the ratio against HLO FLOPs exposes
+remat/masking/dispatch waste.
+
+Usage: python -m benchmarks.roofline [--in results/dryrun.json] [--md out.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # effective bytes/s / chip (per-link, ring)
+
+
+def model_flops_per_device(rec) -> float:
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_active = cfg.active_param_count()
+    ndev = rec.get("num_devices", 256)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens / ndev
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens / ndev
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch / ndev
+
+
+def analyze(rec) -> dict:
+    c = rec.get("corrected", {})
+    flops = c.get("flops", rec.get("flops_per_device_raw", 0.0))
+    bytes_ = c.get("bytes", rec.get("bytes_per_device_raw", 0.0))
+    wire = c.get("wire", 0.0)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = wire / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    mf = model_flops_per_device(rec)
+    mfu_bound = (mf / PEAK_FLOPS) / step_time if step_time > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": rec.get("mesh_tag", "?"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": (mf / flops) if flops else 0.0,
+        "roofline_fraction": mfu_bound,
+        "memory_bytes_per_dev": rec.get("memory", {}).get(
+            "bytes_per_device"),
+        "fits_16g": (rec.get("memory", {}).get("bytes_per_device", 1 << 62)
+                     or 1 << 62) < 16e9,
+        "tag": rec.get("tag"),
+    }
+
+
+def whats_next(row) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_ratio"] < 0.5:
+            return ("compute-bound with low useful ratio: cut masked-"
+                    "attention waste (triangular schedule) / remat policy")
+        return "compute-bound near useful peak: increase arithmetic density"
+    if d == "memory":
+        return ("memory-bound: fuse/reuse activations, bigger blocks, "
+                "bf16 intermediates")
+    return ("collective-bound: overlap collectives with compute, shrink "
+            "FSDP gathers (pod-axis sharding), compress gradients")
+
+
+def render_md(rows) -> str:
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline frac | fits 16G |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {'yes' if r['fits_16g'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.json")
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--json", dest="out_json", default=None)
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.inp):
+        print(f"[roofline] no dry-run report at {args.inp}; run "
+              f"python -m repro.launch.dryrun --all first")
+        return []
+    with open(args.inp) as f:
+        recs = json.load(f)
+    rows = []
+    for rec in recs:
+        if rec.get("status") != "ok":
+            print(f"[fail] {rec['arch']} x {rec['shape']}: "
+                  f"{rec.get('error')}")
+            continue
+        row = analyze(rec)
+        row["next"] = whats_next(row)
+        rows.append(row)
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    for r in rows:
+        print(f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:18s} "
+              f"comp={r['t_compute_s']:9.3e} mem={r['t_memory_s']:9.3e} "
+              f"coll={r['t_collective_s']:9.3e} -> {r['dominant']:10s} "
+              f"useful={r['useful_ratio']:5.2f} "
+              f"roofline={r['roofline_fraction']:5.2f}")
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(render_md(rows) + "\n")
+    if args.out_json:
+        with open(args.out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

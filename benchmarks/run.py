@@ -1,0 +1,60 @@
+"""Benchmark orchestrator: one section per paper table/figure + the
+roofline report.  ``python -m benchmarks.run [--full]``."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include the 10M-edge dataset and big python_loop "
+                         "columns (minutes)")
+    args = ap.parse_args(argv)
+
+    sections = []
+
+    def section(name, fn):
+        print(f"\n=== {name} {'=' * max(1, 60 - len(name))}")
+        t0 = time.perf_counter()
+        try:
+            fn()
+            status = "ok"
+        except Exception:
+            traceback.print_exc()
+            status = "FAIL"
+        dt = time.perf_counter() - t0
+        sections.append((name, status, dt))
+        print(f"--- {name}: {status} ({dt:.1f}s)")
+
+    from benchmarks import (bench_gee_distributed, bench_gee_options,
+                            bench_gee_sbm, bench_quality, bench_storage,
+                            roofline)
+
+    section("storage (paper Fig.1 / Sec.3)", bench_storage.run)
+    section("quality (sparse == dense, downstream)", bench_quality.run)
+    section("SBM scaling (paper Fig.3)",
+            lambda: bench_gee_sbm.run(full=args.full,
+                                      nodes=(100, 1000, 3000, 5000, 10000)
+                                      if args.full
+                                      else (100, 1000, 3000)))
+    section("real datasets x options (paper Tables 3-4)",
+            lambda: bench_gee_options.run(full=args.full))
+    section("distributed GEE (weak scaling, collectives)",
+            bench_gee_distributed.run)
+    section("roofline (from dry-run)", lambda: roofline.main([]))
+
+    print("\n==== summary " + "=" * 47)
+    failed = 0
+    for name, status, dt in sections:
+        print(f"{status:5s} {dt:8.1f}s  {name}")
+        failed += status != "ok"
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

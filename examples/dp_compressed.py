@@ -1,0 +1,94 @@
+"""Distributed-optimization trick demo: data-parallel training with int8
+error-feedback gradient compression (distributed/compression.py).
+
+Runs in a subprocess with 4 fake XLA devices; trains the same model with
+f32 all-reduce and with int8 error-feedback all-reduce, compares loss
+curves and reports the wire-byte saving.
+
+  PYTHONPATH=src python examples/dp_compressed.py
+"""
+
+import os
+import subprocess
+import sys
+
+SNIPPET = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.distributed.compression import (compressed_psum_mean,
+                                           wire_bytes_f32, wire_bytes_int8)
+
+mesh = jax.make_mesh((4,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+
+# toy regression model, replicated params, sharded batch
+def init():
+    k = jax.random.PRNGKey(0)
+    return {"w1": jax.random.normal(k, (16, 64)) * 0.3,
+            "w2": jax.random.normal(k, (64, 1)) * 0.3}
+
+def model(p, x):
+    return jax.nn.tanh(x @ p["w1"]) @ p["w2"]
+
+def data(step):
+    k = jax.random.PRNGKey(step)
+    x = jax.random.normal(k, (64, 16))
+    y = jnp.sin(x.sum(-1, keepdims=True))
+    return x, y
+
+def make_step(compressed):
+    def step(params, error, x, y):
+        def body(params, error, x, y):
+            def loss(p):
+                return jnp.mean((model(p, x) - y) ** 2)
+            l, g = jax.value_and_grad(loss)(params)
+            if compressed:
+                out = jax.tree.map(
+                    lambda gg, ee: compressed_psum_mean(gg, "data", ee),
+                    g, error)
+                g = jax.tree.map(lambda o: o[0], out,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+                error = jax.tree.map(lambda o: o[1], out,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+            else:
+                g = jax.lax.pmean(g, "data")
+            params = jax.tree.map(lambda p, gg: p - 0.1 * gg, params, g)
+            return params, error, jax.lax.pmean(l, "data")
+        return shard_map(body, mesh=mesh,
+                         in_specs=(P(), P(), P("data"), P("data")),
+                         out_specs=(P(), P(), P()),
+                         check_vma=False)(params, error, x, y)
+    return jax.jit(step)
+
+for compressed in (False, True):
+    params = init()
+    error = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    step = make_step(compressed)
+    losses = []
+    for i in range(150):
+        x, y = data(i)
+        params, error, l = step(params, error, x, y)
+        losses.append(float(l))
+    tag = "int8+error-feedback" if compressed else "f32 all-reduce     "
+    print(f"{tag}: loss {losses[0]:.4f} -> {np.mean(losses[-10:]):.4f}")
+
+f32b = wire_bytes_f32(params)
+i8b = wire_bytes_int8(params)
+print(f"wire bytes per sync: f32 {f32b:,} -> int8 {i8b:,} "
+      f"({f32b / i8b:.1f}x smaller)")
+"""
+
+
+def main():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env.setdefault("PYTHONPATH",
+                   os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run([sys.executable, "-c", SNIPPET], env=env,
+                          text=True)
+    raise SystemExit(proc.returncode)
+
+
+if __name__ == "__main__":
+    main()

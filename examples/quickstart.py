@@ -1,0 +1,55 @@
+"""Quickstart: the paper's pipeline in 30 lines.
+
+Samples an SBM graph (the paper's simulation setup), embeds it with sparse
+GEE (all three options on), classifies vertices from the embedding, and
+runs unsupervised clustering -- then cross-checks every backend.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.api import GEEEmbedder
+from repro.core.ensemble import adjusted_rand_index, gee_cluster
+from repro.core.gee import GEEOptions
+from repro.graph.sbm import sample_sbm
+
+
+def main():
+    # the paper's SBM: 3 classes, priors [.2, .3, .5], p_in=.13, p_out=.10
+    graph = sample_sbm(num_nodes=2000, seed=0)
+    print(f"SBM: N={graph.edges.num_nodes}, "
+          f"E={graph.edges.num_edges // 2} undirected edges")
+
+    opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+
+    # 1. embed (production sparse path)
+    emb = GEEEmbedder(num_classes=graph.num_classes, options=opts)
+    z = np.asarray(emb.fit_transform(graph.edges, graph.labels))
+    print(f"embedding Z: {z.shape}, rows unit-norm: "
+          f"{np.allclose(np.linalg.norm(z, axis=1)[z.any(1)], 1.0, atol=1e-4)}")
+
+    # 2. vertex classification from the embedding
+    acc = float((np.asarray(emb.predict()) == graph.labels).mean())
+    print(f"nearest-class-mean accuracy: {acc:.3f}")
+
+    # 3. unsupervised clustering (encoder ensemble).  The paper's SBM
+    # (0.13 vs 0.10) sits near the detectability threshold at this size,
+    # so the clustering demo uses a better-separated SBM.
+    graph2 = sample_sbm(num_nodes=2000, p_within=0.18, p_between=0.04,
+                        seed=1)
+    res = gee_cluster(graph2.edges, graph2.num_classes, replicates=3,
+                      seed=0)
+    ari = adjusted_rand_index(np.asarray(res.labels), graph2.labels)
+    print(f"clustering ARI (no labels used, separated SBM): {ari:.3f}")
+
+    # 4. every backend agrees (the paper's core claim: the speedup is free)
+    for backend in ("dense_jax", "scipy", "pallas"):
+        z2 = np.asarray(GEEEmbedder(num_classes=graph.num_classes,
+                                    options=opts, backend=backend)
+                        .fit_transform(graph.edges, graph.labels))
+        print(f"max |Z - Z_{backend}| = {np.abs(z - z2).max():.2e}")
+
+
+if __name__ == "__main__":
+    main()

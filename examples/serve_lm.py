@@ -1,0 +1,16 @@
+"""Serving example: continuous-batching decode server with batched
+requests of mixed lengths (wraps launch/serve with a tiny model).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main(["--arch", "qwen3-0.6b", "--requests", "10", "--slots", "4",
+                "--max-new", "16", "--temperature", "0.7"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Fault-tolerant run manager: periodic + async checkpointing, resume,
+retention, and a failure-injection hook used by the integration tests.
+
+At 1000+ node scale the checkpoint cadence is the fault-tolerance budget:
+with MTBF_cluster = MTBF_node / N, the optimal interval is
+sqrt(2 * t_ckpt * MTBF_cluster) (Young/Daly).  ``suggest_interval`` applies
+that formula; the default parameters document the assumption set.
+
+Async writes: ``save_async`` snapshots the (host-gathered) tree and hands it
+to a writer thread, so the train loop only blocks for the device->host copy,
+not the disk write.  ``wait`` joins the writer (always called before exit
+and before reading back a checkpoint).
+"""
+
+from __future__ import annotations
+
+import math
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+
+def suggest_interval(ckpt_seconds: float, node_mtbf_hours: float,
+                     num_nodes: int, step_seconds: float) -> int:
+    """Young/Daly optimal checkpoint interval, in steps."""
+    mtbf_cluster = node_mtbf_hours * 3600.0 / max(num_nodes, 1)
+    seconds = math.sqrt(2.0 * ckpt_seconds * mtbf_cluster)
+    return max(1, int(seconds / max(step_seconds, 1e-9)))
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, interval: int = 100,
+                 keep_last: int = 3,
+                 failure_hook: Optional[Callable[[int], None]] = None):
+        self.directory = directory
+        self.interval = interval
+        self.keep_last = keep_last
+        self.failure_hook = failure_hook      # tests inject crashes here
+        self._q: "queue.Queue[tuple]" = queue.Queue()
+        self._writer = threading.Thread(target=self._write_loop, daemon=True)
+        self._writer.start()
+        self._errors: list[BaseException] = []
+
+    # -- writer thread -------------------------------------------------------
+    def _write_loop(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree, extra = item
+            try:
+                if self.failure_hook is not None:
+                    self.failure_hook(step)
+                ckpt.save(self.directory, step, tree, extra)
+                self._retain()
+            except BaseException as e:       # surfaced via .wait()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _retain(self):
+        steps = ckpt.available_steps(self.directory)
+        for s in steps[: -self.keep_last]:
+            import shutil, os
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- public API ----------------------------------------------------------
+    def maybe_save(self, step: int, tree, extra: dict | None = None,
+                   force: bool = False):
+        if force or (step > 0 and step % self.interval == 0):
+            self.save_async(step, tree, extra)
+
+    def save_async(self, step: int, tree, extra: dict | None = None):
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self._q.put((step, host_tree, extra or {}))
+
+    def wait(self, raise_errors: bool = True):
+        self._q.join()
+        if raise_errors and self._errors:
+            err, self._errors = self._errors[0], []
+            raise err
+
+    def close(self):
+        self.wait(raise_errors=False)
+        self._q.put(None)
+        self._writer.join(timeout=10)
+
+    def latest_step(self) -> Optional[int]:
+        steps = ckpt.available_steps(self.directory)
+        return steps[-1] if steps else None
+
+    def restore_latest(self, like_tree, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None, {}
+        tree, extra = ckpt.restore(self.directory, step, like_tree,
+                                   shardings)
+        return step, tree, extra
+
+
+class StragglerMonitor:
+    """Step-time watchdog: flags steps slower than ``threshold`` x the
+    running median.  On a real fleet this feeds the controller that
+    re-shards around slow hosts (see elastic.py); here it records events so
+    the training loop (and tests) can observe them."""
+
+    def __init__(self, threshold: float = 2.0, window: int = 50):
+        self.threshold = threshold
+        self.window = window
+        self.times: list[float] = []
+        self.events: list[tuple[int, float, float]] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start_step(self, step: int):
+        self._step = step
+        self._t0 = time.perf_counter()
+
+    def end_step(self) -> Optional[float]:
+        if self._t0 is None:
+            return None
+        dt = time.perf_counter() - self._t0
+        med = float(np.median(self.times[-self.window:])) if self.times \
+            else dt
+        self.times.append(dt)
+        if len(self.times) > 5 and dt > self.threshold * med:
+            self.events.append((self._step, dt, med))
+        return dt

@@ -1,0 +1,8 @@
+from repro.core.gee import (ALL_OPTION_SETTINGS, GEEOptions, gee,
+                            gee_dense_jax, gee_python_loop, gee_scipy,
+                            gee_sparse_jax)
+
+__all__ = [
+    "ALL_OPTION_SETTINGS", "GEEOptions", "gee", "gee_dense_jax",
+    "gee_python_loop", "gee_scipy", "gee_sparse_jax",
+]

@@ -1,0 +1,117 @@
+"""Public API: the paper's technique as a first-class, composable module.
+
+``GEEEmbedder`` is the single front door used by the examples, the LM
+featurizer and the benchmarks.  It hides backend selection (the production
+``sparse_jax`` path, the Pallas kernel path, the paper's SciPy path, the
+dense oracle and the distributed multi-pod path) behind one object.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gee import GEEOptions, gee, class_counts
+from repro.graph.containers import EdgeList, edge_list_from_numpy, symmetrize
+
+
+@dataclasses.dataclass
+class GEEEmbedder:
+    """Fit/transform-style wrapper around sparse GEE.
+
+    backend: 'sparse_jax' (default), 'pallas', 'dense_jax', 'scipy',
+             'python_loop', or 'distributed'.
+    """
+
+    num_classes: int
+    options: GEEOptions = GEEOptions(laplacian=True, diag_aug=True,
+                                     correlation=True)
+    backend: str = "sparse_jax"
+    mesh: Optional[object] = None            # required for 'distributed'
+    mesh_axes: tuple = ("data",)
+
+    _edges: Optional[EdgeList] = dataclasses.field(default=None, repr=False)
+    _labels: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
+    _z: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
+
+    # -- construction helpers ------------------------------------------------
+    @staticmethod
+    def from_arrays(src, dst, weight, labels, num_classes: int,
+                    num_nodes: int | None = None, undirected: bool = True,
+                    **kw) -> "GEEEmbedder":
+        n = int(num_nodes if num_nodes is not None
+                else max(int(np.max(src)), int(np.max(dst))) + 1)
+        edges = edge_list_from_numpy(np.asarray(src), np.asarray(dst),
+                                     None if weight is None
+                                     else np.asarray(weight), n)
+        if undirected:
+            edges = symmetrize(edges)
+        emb = GEEEmbedder(num_classes=num_classes, **kw)
+        return emb.fit(edges, labels)
+
+    # -- sklearn-ish surface -------------------------------------------------
+    def fit(self, edges: EdgeList, labels) -> "GEEEmbedder":
+        self._edges = edges
+        self._labels = jnp.asarray(labels, jnp.int32)
+        self._z = None
+        return self
+
+    def transform(self) -> jax.Array:
+        if self._edges is None:
+            raise RuntimeError("call fit() first")
+        if self._z is None:
+            self._z = self._compute()
+        return self._z
+
+    def fit_transform(self, edges: EdgeList, labels) -> jax.Array:
+        return self.fit(edges, labels).transform()
+
+    # -- classification on top of the embedding ------------------------------
+    def class_means(self) -> jax.Array:
+        z = self.transform()
+        z = z[: self._edges.num_nodes]
+        onehot = jax.nn.one_hot(self._labels, self.num_classes, dtype=z.dtype)
+        counts = onehot.sum(0)
+        return (onehot.T @ z) / jnp.maximum(counts, 1.0)[:, None]
+
+    def predict(self, rows: jax.Array | None = None) -> jax.Array:
+        """Nearest-class-mean vertex classification (the standard GEE
+        downstream evaluation)."""
+        z = self.transform()[: self._edges.num_nodes]
+        if rows is not None:
+            z = z[rows]
+        means = self.class_means()
+        d2 = jnp.sum((z[:, None, :] - means[None, :, :]) ** 2, axis=-1)
+        return jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+    # -- internals -----------------------------------------------------------
+    def _compute(self) -> jax.Array:
+        edges, labels = self._edges, self._labels
+        if self.backend == "distributed":
+            from repro.core.distributed import gee_distributed
+
+            if self.mesh is None:
+                raise ValueError("distributed backend needs a mesh")
+            z = gee_distributed(edges, labels, self.num_classes, self.options,
+                                mesh=self.mesh, axes=self.mesh_axes)
+            return z[: edges.num_nodes]
+        if self.backend == "pallas":
+            from repro.kernels.ops import gee_pallas
+
+            return gee_pallas(edges, labels, self.num_classes, self.options)
+        return gee(edges, labels, self.num_classes, self.options,
+                   backend=self.backend)
+
+
+def node_features(edges: EdgeList, labels, num_classes: int,
+                  options: GEEOptions = GEEOptions(laplacian=True,
+                                                   diag_aug=True,
+                                                   correlation=True),
+                  backend: str = "sparse_jax") -> jax.Array:
+    """One-call functional form: graph + labels -> [N, K] features."""
+    return GEEEmbedder(num_classes=num_classes, options=options,
+                       backend=backend).fit_transform(edges, labels)

@@ -1,0 +1,142 @@
+"""Multi-device sparse GEE via shard_map (DESIGN.md section 5).
+
+The paper's insight -- never store or visit zeros -- promoted to the
+collective level:
+
+* The edge list is 1-D sharded across the data-parallel mesh axes (each
+  device owns E/P edges; padding edges have weight 0 and are exact no-ops).
+* Each device computes a *partial* embedding by local segment-sum: O(E/P)
+  work, an [N_pad, K] partial.
+* One ``psum_scatter`` (reduce-scatter) over the edge axes produces the
+  row-sharded final Z: each device ends with [N_pad/P, K].  Only O(N*K)
+  bytes ever cross the interconnect -- no adjacency structure is shipped.
+* Laplacian degrees need one extra all-reduce of an [N_pad] vector.
+
+Communication accounting (used by the roofline benchmark):
+
+  lap off:  reduce-scatter of N_pad*K floats          -> (P-1)/P * N*K*4 B/dev
+  lap on:   + all-reduce of N_pad floats              -> 2(P-1)/P * N*4 B/dev
+
+Compare with the dense alternative (all-gather A or Z dense): the sparse
+path's collective volume is independent of E, exactly the paper's "zeros
+never cost" property.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.gee import GEEOptions, class_counts
+from repro.graph.containers import EdgeList, add_self_loops
+from repro.graph.partition import shard_edges
+
+
+def _axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def pad_nodes(n: int, p: int) -> int:
+    """Smallest multiple of p >= n (row padding for the reduce-scatter)."""
+    return ((n + p - 1) // p) * p
+
+
+def _local_gee_partial(src, dst, weight, labels, winv, num_nodes_pad: int,
+                       num_classes: int, laplacian: bool,
+                       axes: tuple[str, ...]):
+    """Per-device body: partial segment-sum GEE over the local edge shard."""
+    if laplacian:
+        # Degrees need global knowledge: partial degree then all-reduce.
+        deg_part = jax.ops.segment_sum(weight, src, num_segments=num_nodes_pad)
+        deg = jax.lax.psum(deg_part, axes)
+        dinv = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
+        weight = weight * dinv[src] * dinv[dst]
+
+    yd = labels[dst]
+    valid = yd >= 0
+    yd_safe = jnp.where(valid, yd, 0)
+    contrib = jnp.where(valid, weight * winv[yd_safe], 0.0)
+    flat = src * num_classes + yd_safe
+    z = jax.ops.segment_sum(contrib, flat,
+                            num_segments=num_nodes_pad * num_classes)
+    return z.reshape(num_nodes_pad, num_classes)
+
+
+@partial(jax.jit, static_argnames=("num_classes", "opts", "mesh", "axes"))
+def _gee_distributed_jit(src, dst, weight, labels, num_classes: int,
+                         opts: GEEOptions, mesh: Mesh,
+                         axes: tuple[str, ...]):
+    p = _axis_size(mesh, axes)
+    n_pad = src_n_pad = labels.shape[0]          # labels pre-padded to mult of p
+    nk = class_counts(labels, num_classes)
+    winv = jnp.where(nk > 0, 1.0 / jnp.maximum(nk, 1.0), 0.0)
+
+    def body(src_l, dst_l, w_l, labels_l, winv_l):
+        z_part = _local_gee_partial(
+            src_l, dst_l, w_l, labels_l, winv_l, n_pad, num_classes,
+            opts.laplacian, axes)
+        # reduce-scatter rows: [N_pad, K] -> [N_pad/P, K], summed over shards
+        z_rows = jax.lax.psum_scatter(z_part, axes, scatter_dimension=0,
+                                      tiled=True)
+        if opts.correlation:
+            norm = jnp.sqrt(jnp.sum(z_rows * z_rows, axis=-1, keepdims=True))
+            z_rows = jnp.where(norm > 0, z_rows / jnp.maximum(norm, 1e-30), 0.0)
+        return z_rows
+
+    spec_e = P(axes)                  # edge arrays sharded on dim 0
+    spec_r = P()                      # labels / winv replicated
+    out_spec = P(axes, None)          # Z rows sharded on dim 0
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(spec_e, spec_e, spec_e, spec_r, spec_r),
+                   out_specs=out_spec)
+    return fn(src, dst, weight, labels, winv)
+
+
+def gee_distributed(edges: EdgeList, labels, num_classes: int,
+                    opts: GEEOptions = GEEOptions(), *, mesh: Mesh,
+                    axes: tuple[str, ...] = ("data",),
+                    pre_sharded: bool = False) -> jax.Array:
+    """Distributed sparse GEE.  Returns Z with rows sharded over ``axes``.
+
+    ``pre_sharded=True`` skips the host-side shuffle/pad (the caller already
+    produced device-ready arrays, e.g. the dry-run path).
+    Row padding: Z has ``pad_nodes(N, P)`` rows; callers slice ``[:N]``.
+    """
+    p = _axis_size(mesh, axes)
+    if opts.diag_aug:
+        edges = add_self_loops(edges)
+    if not pre_sharded:
+        edges = shard_edges(edges, p)
+    n_pad = pad_nodes(edges.num_nodes, p)
+    labels = jnp.asarray(labels, jnp.int32)
+    if labels.shape[0] < n_pad:
+        labels = jnp.concatenate(
+            [labels, jnp.full((n_pad - labels.shape[0],), -1, jnp.int32)])
+    return _gee_distributed_jit(edges.src, edges.dst, edges.weight, labels,
+                                num_classes, opts, mesh, tuple(axes))
+
+
+def lower_gee_distributed(mesh: Mesh, axes: tuple[str, ...], num_nodes: int,
+                          num_edges: int, num_classes: int,
+                          opts: GEEOptions = GEEOptions()):
+    """Abstract lowering of the distributed GEE step for the dry-run: no
+    device arrays are allocated, shapes only."""
+    p = _axis_size(mesh, axes)
+    e_pad = ((num_edges + p - 1) // p) * p
+    n_pad = pad_nodes(num_nodes, p)
+    s_e = jax.ShapeDtypeStruct((e_pad,), jnp.int32,
+                               sharding=NamedSharding(mesh, P(axes)))
+    s_w = jax.ShapeDtypeStruct((e_pad,), jnp.float32,
+                               sharding=NamedSharding(mesh, P(axes)))
+    s_y = jax.ShapeDtypeStruct((n_pad,), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    fn = partial(_gee_distributed_jit, num_classes=num_classes, opts=opts,
+                 mesh=mesh, axes=tuple(axes))
+    return jax.jit(fn).lower(s_e, s_e, s_w, s_y)

@@ -1,0 +1,112 @@
+"""GEE-based vertex clustering / community detection (encoder ensemble).
+
+Follows the "Graph Encoder Ensemble" recipe [Shen et al. 2023, ref 11 of the
+paper]: alternate GEE embedding with nearest-centroid label refinement, run
+several random restarts, keep the replicate with the smallest normalized
+within-cluster sum of squares.  Everything is jit-able; the embedding uses
+the production sparse path, so clustering scales O(E) per iteration exactly
+like the paper's embedding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gee import GEEOptions, gee_sparse_jax
+from repro.graph.containers import EdgeList
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ClusterResult:
+    labels: jax.Array        # [N] int32 cluster assignment
+    embedding: jax.Array     # [N, K] final embedding
+    score: jax.Array         # scalar: normalized within-cluster SSE (lower=better)
+    iters: jax.Array         # iterations until convergence
+
+
+def _assign_nearest_centroid(z: jax.Array, labels: jax.Array, k: int):
+    """One refinement sweep: class means of Z, then nearest-mean relabel."""
+    onehot = jax.nn.one_hot(labels, k, dtype=z.dtype)          # [N, K]
+    counts = onehot.sum(0)                                      # [K]
+    sums = onehot.T @ z                                         # [K, K]
+    means = sums / jnp.maximum(counts, 1.0)[:, None]
+    # Guard empty clusters: keep their mean far away so nothing is assigned.
+    means = jnp.where((counts > 0)[:, None], means, jnp.inf)
+    d2 = jnp.sum((z[:, None, :] - means[None, :, :]) ** 2, axis=-1)
+    d2 = jnp.where(jnp.isnan(d2), jnp.inf, d2)
+    new = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    best = jnp.min(d2, axis=-1)
+    score = jnp.where(jnp.isfinite(best), best, 0.0).mean()
+    return new, score
+
+
+@partial(jax.jit, static_argnames=("num_classes", "max_iters", "opts"))
+def gee_cluster_once(edges: EdgeList, init_labels: jax.Array,
+                     num_classes: int, max_iters: int = 30,
+                     opts: GEEOptions = GEEOptions(laplacian=True,
+                                                   diag_aug=True,
+                                                   correlation=True)):
+    """Single replicate: iterate (embed with current labels) -> (relabel)."""
+
+    def step(state):
+        labels, _, it, _ = state
+        z = gee_sparse_jax(edges, labels, num_classes, opts)
+        new, score = _assign_nearest_centroid(z, labels, num_classes)
+        changed = jnp.any(new != labels)
+        return new, score, it + 1, changed
+
+    def cond(state):
+        _, _, it, changed = state
+        return jnp.logical_and(changed, it < max_iters)
+
+    n = edges.num_nodes
+    state = (init_labels.astype(jnp.int32), jnp.inf, jnp.int32(0),
+             jnp.bool_(True))
+    labels, score, iters, _ = jax.lax.while_loop(cond, step, state)
+    z = gee_sparse_jax(edges, labels, num_classes, opts)
+    return ClusterResult(labels=labels, embedding=z, score=score, iters=iters)
+
+
+def gee_cluster(edges: EdgeList, num_classes: int, *, replicates: int = 5,
+                max_iters: int = 30, seed: int = 0,
+                opts: GEEOptions = GEEOptions(laplacian=True, diag_aug=True,
+                                              correlation=True)) -> ClusterResult:
+    """Ensemble clustering: best-of-R random restarts by SSE score."""
+    key = jax.random.PRNGKey(seed)
+    best: ClusterResult | None = None
+    for r in range(replicates):
+        key, sub = jax.random.split(key)
+        init = jax.random.randint(sub, (edges.num_nodes,), 0, num_classes,
+                                  dtype=jnp.int32)
+        res = gee_cluster_once(edges, init, num_classes, max_iters, opts)
+        if best is None or float(res.score) < float(best.score):
+            best = res
+    assert best is not None
+    return best
+
+
+def adjusted_rand_index(a, b) -> float:
+    """ARI between two labelings (numpy-side helper for tests/benchmarks)."""
+    import numpy as np
+
+    a = np.asarray(a)
+    b = np.asarray(b)
+    n = a.shape[0]
+    ka, kb = int(a.max()) + 1, int(b.max()) + 1
+    ct = np.zeros((ka, kb), np.int64)
+    np.add.at(ct, (a, b), 1)
+    comb = lambda x: x * (x - 1) // 2
+    sum_ij = comb(ct).sum()
+    sum_a = comb(ct.sum(1)).sum()
+    sum_b = comb(ct.sum(0)).sum()
+    total = comb(np.int64(n))
+    expected = sum_a * sum_b / max(total, 1)
+    max_index = (sum_a + sum_b) / 2
+    if max_index == expected:
+        return 1.0
+    return float((sum_ij - expected) / (max_index - expected))

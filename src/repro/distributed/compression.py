@@ -1,0 +1,96 @@
+"""Int8 gradient compression with error feedback, as a shard_map collective.
+
+The distributed-optimization trick for bandwidth-bound data parallelism:
+before the cross-replica all-reduce, each replica quantizes its gradient
+shard to int8 with a per-tensor scale, all-reduces the int8 payload (4x
+fewer bytes on the wire), dequantizes, and keeps the quantization residual
+locally, adding it back into the next step's gradient ("error feedback", so
+the bias is corrected over time and SGD-style convergence is preserved).
+
+Used by examples/dp_compressed.py and the distributed tests; the main LM
+path keeps GSPMD's fused bf16 collectives (compression there is a
+hillclimb option, not the default -- see EXPERIMENTS.md section Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(x: jax.Array, axis_name: str,
+                         error: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Inside shard_map: error-feedback int8 all-reduce mean of ``x``.
+
+    Returns (mean_gradient f32, new_error).  Bytes on the wire: 1/4 of f32
+    (int8 payload) + one f32 scale per tensor.
+
+    The quantization scale must be SHARED across replicas before
+    quantizing (one pmax of a scalar): summing int8 payloads quantized at
+    different per-replica scales and dequantizing with any single scale is
+    biased (a bug this module once had -- caught by
+    test_compressed_psum_matches_mean).
+    """
+    corrected = x.astype(jnp.float32) + error
+    local_max = jnp.max(jnp.abs(corrected))
+    scale = jnp.maximum(jax.lax.pmax(local_max, axis_name) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    new_error = corrected - dequantize_int8(q, scale)
+    # all-reduce the int8 payload in int32 accumulation (int8 sums overflow)
+    summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    mean = summed.astype(jnp.float32) * scale / n
+    return mean, new_error
+
+
+def make_compressed_allreduce(mesh: Mesh, axis_name: str = "data"):
+    """-> f(grads_tree, error_tree) = (mean_grads, new_error), jit-ready.
+
+    grads are assumed replicated-per-replica arrays sharded over
+    ``axis_name`` only at the leading *replica* level, i.e. each device
+    holds its local gradient (the usual shard_map DP setup).
+    """
+
+    def per_leaf(g, e):
+        return compressed_psum_mean(g, axis_name, e)
+
+    def allreduce(grads, error):
+        out = jax.tree.map(per_leaf, grads, error)
+        mean = jax.tree.map(lambda o: o[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        new_e = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return mean, new_e
+
+    def wrapped(grads, error):
+        fn = shard_map(allreduce, mesh=mesh,
+                       in_specs=(P(axis_name), P(axis_name)),
+                       out_specs=(P(), P(axis_name)),
+                       check_vma=False)
+        return fn(grads, error)
+
+    return wrapped
+
+
+def wire_bytes_f32(tree: Any) -> int:
+    return sum(leaf.size * 4 for leaf in jax.tree.leaves(tree))
+
+
+def wire_bytes_int8(tree: Any) -> int:
+    return sum(leaf.size + 4 for leaf in jax.tree.leaves(tree))

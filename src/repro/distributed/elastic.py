@@ -1,0 +1,70 @@
+"""Elastic scaling: re-shard a run onto a different mesh.
+
+The production story at 1000+ nodes: a pod drops out, the scheduler hands
+back a smaller (or later, larger) slice, and training resumes from the last
+checkpoint *re-sharded* onto the new mesh.  Because checkpoints store
+host-gathered leaves (checkpoint/ckpt.py) and shardings are derived from
+the abstract param tree + the *current* mesh (distributed/sharding.py), the
+re-shard is a single device_put per leaf -- any mesh shape to any other.
+
+``replan_mesh`` implements the shrink/grow policy: keep the model axis
+(tensor-parallel degree is fixed by memory), absorb node loss into the data
+axis, and require the global batch to stay divisible (gradient accumulation
+factor adjusts to preserve the *effective* batch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import ckpt
+from repro.distributed.sharding import param_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple
+    axis_names: tuple
+    microbatches: int          # grad-accum factor preserving effective batch
+    note: str = ""
+
+
+def replan_mesh(devices_available: int, model_parallel: int,
+                global_batch: int, base_microbatches: int = 1,
+                pods: int = 1) -> ElasticPlan:
+    """Shrink/grow policy: fix model axis, flex data axis."""
+    if devices_available % (model_parallel * pods):
+        # drop stragglers until divisible (documented policy: round down)
+        devices_available -= devices_available % (model_parallel * pods)
+    data_max = devices_available // (model_parallel * pods)
+    if data_max < 1:
+        raise ValueError("not enough devices for the model-parallel degree")
+    # the data axis must evenly split the global batch (pjit requirement);
+    # round DOWN to the largest divisor -- idling a few hosts beats uneven
+    # per-replica batches.
+    data = data_max
+    while data > 1 and global_batch % (data * pods):
+        data -= 1
+    # grad accumulation preserves the per-step effective batch
+    micro = base_microbatches
+    while global_batch % (data * pods * micro) and micro < global_batch:
+        micro += 1
+    shape = (pods, data, model_parallel) if pods > 1 else (data,
+                                                           model_parallel)
+    names = ("pod", "data", "model") if pods > 1 else ("data", "model")
+    return ElasticPlan(shape, names, micro,
+                       note=f"data axis {data} (of {data_max} available), "
+                            f"accum x{micro}")
+
+
+def restore_on_mesh(directory: str, step: int, abstract_params,
+                    mesh: Mesh):
+    """Checkpoint (any mesh) -> params sharded for ``mesh``."""
+    shardings = param_shardings(abstract_params, mesh)
+    params, extra = ckpt.restore(directory, step, abstract_params,
+                                 shardings)
+    return params, extra

@@ -1,0 +1,307 @@
+"""Expert parallelism as an explicit shard_map region (the EP fast path).
+
+Why this exists: under pure GSPMD, the MoE dispatch scatter's updates get
+REPLICATED -- the dry-run measured a 30 GB f32 all-gather of the dispatched
+tokens per MoE layer on kimi-k2 (see EXPERIMENTS.md section Perf).  GSPMD
+has no all-to-all lowering for data->expert scatters, so we write the
+communication by hand:
+
+  per device (pod p, data d, model m), with experts sharded E_loc = E/M
+  over the model axis and tokens sharded over (pod, data):
+
+   1. local routing: top-k over the full router (router weights replicated),
+   2. first-stage dispatch: sort the T_loc*k choices by *destination model
+      shard* (dest = expert // E_loc), capacity C_send per destination,
+   3. all_to_all over the model axis ships [M, C_send, D] token payloads --
+      the minimal EP volume, bf16 on the wire,
+   4. second-stage local dispatch: sort received rows by local expert id,
+      capacity C_loc, batched per-expert GLU (weights FSDP-gathered over
+      the data axis inside the body; reduce-scatter of their grads is the
+      automatic transpose),
+   5. all_to_all the outputs back to their source device; combine locally
+      with the kept router weights (dropped rows contribute exactly 0).
+
+  Shared (always-on) experts run Megatron-style inside the same region:
+  hidden dim sharded over model, one psum to recombine.
+
+Everything is differentiable: shard_map transposes all_to_all -> all_to_all
+and all_gather -> reduce_scatter/psum automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.config import MoEConfig
+from repro.models.layers import truncated_normal_init
+
+
+def _round4(x: int) -> int:
+    return max(4, ((x + 3) // 4) * 4)
+
+
+def applicable(moe: MoEConfig, mesh: Optional[Mesh]) -> bool:
+    if mesh is None or "model" not in mesh.shape:
+        return False
+    m = mesh.shape["model"]
+    return m > 1 and moe.num_experts % m == 0
+
+
+def _dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def moe_forward_ep(params: dict, x: jax.Array, moe: MoEConfig, mesh: Mesh,
+                   *, local_capacity_factor: float = 1.5,
+                   serving: bool = False):
+    """Drop-in replacement for moe_forward when EP applies.
+
+    x [B, S, D] (batch sharded over (pod, data), replicated over model).
+
+    ``serving=True``: weight-stationary layout (SERVING_RULES) -- expert
+    weights arrive E x model, F x data and are NEVER gathered; the down
+    projection's D output is psum'd over data instead.  This is the decode
+    fast path: gathering 2 TB of experts to serve 128 tokens cost 246 GB of
+    wire per step under the training layout.
+    """
+    b, s, d = x.shape
+    dp = _dp_axes(mesh)
+    model = "model"
+    m_size = mesh.shape[model]
+    e_loc = moe.num_experts // m_size
+    f = moe.d_expert
+    k = moe.top_k
+
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    t_loc = (b // dp_total) * s
+    data_size = mesh.shape.get("data", 1)
+    # Serving: tokens are all-gathered over the data axis inside the body
+    # (expert F-shards live across data rows; every row must process the
+    # SAME token set so the final psum over data completes full-F outputs).
+    t_eff = t_loc * data_size if serving else t_loc
+    # Tokens are additionally sliced across the model axis when divisible
+    # (see body); capacities must be computed from the *post-slice* count,
+    # otherwise the send buffers and expert batch are M-fold padded.
+    will_slice = (t_eff % m_size == 0) and m_size > 1
+    t_route = t_eff // m_size if will_slice else t_eff
+    c_send = _round4(int(t_route * k * moe.capacity_factor / m_size) + 1)
+    c_loc = _round4(int(m_size * c_send * local_capacity_factor / e_loc) + 1)
+
+    def body(x_loc, router, we_gate, we_up, we_down, shared):
+        bl, sl, _ = x_loc.shape
+        t_local = bl * sl
+        xf_local = x_loc.reshape(t_local, d)
+        if serving and data_size > 1:
+            xf_full = jax.lax.all_gather(xf_local, "data", axis=0,
+                                         tiled=True)
+        else:
+            xf_full = xf_local
+        t_full = xf_full.shape[0]
+
+        # x is REPLICATED across the model axis (tensor parallelism), so
+        # without care every model peer would route and dispatch identical
+        # copies -- M-fold duplicate expert compute.  Slice the token range
+        # by model index so each peer owns a distinct 1/M of the tokens,
+        # then all_gather the combined outputs at the end.
+        sliced = will_slice
+        if sliced:
+            tl = t_full // m_size
+            midx = jax.lax.axis_index(model)
+            xf = jax.lax.dynamic_slice_in_dim(xf_full, midx * tl, tl, 0)
+        else:
+            tl = t_full
+            xf = xf_full
+
+        # ---- 1. routing (replicated router) ----
+        logits = xf.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        e_flat = top_e.reshape(tl * k)
+        w_flat = top_p.reshape(tl * k)
+        token_of = jnp.arange(tl * k, dtype=jnp.int32) // k
+
+        # ---- 2. first-stage dispatch (by destination shard) ----
+        dest = e_flat // e_loc                                  # [tl*k]
+        order = jnp.argsort(dest, stable=True)
+        sorted_dest = dest[order]
+        counts = jnp.bincount(dest, length=m_size)
+        starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                  jnp.cumsum(counts)[:-1]])
+        pos = jnp.arange(tl * k, dtype=jnp.int32) - starts[sorted_dest]
+        keep = pos < c_send
+        slot = jnp.where(keep, sorted_dest * c_send + pos,
+                         m_size * c_send)                       # OOB drop
+        send_x = jnp.zeros((m_size * c_send, d), x.dtype
+                           ).at[slot].set(xf[token_of[order]],
+                                          mode="drop", unique_indices=True)
+        send_eid = jnp.full((m_size * c_send,), -1, jnp.int32
+                            ).at[slot].set((e_flat % e_loc)[order],
+                                           mode="drop", unique_indices=True)
+        slot_choice = jnp.full((m_size * c_send,), -1, jnp.int32
+                               ).at[slot].set(order.astype(jnp.int32),
+                                              mode="drop",
+                                              unique_indices=True)
+
+        # ---- 3. ship to expert shards ----
+        recv_x = jax.lax.all_to_all(send_x.reshape(m_size, c_send, d),
+                                    model, 0, 0, tiled=False
+                                    ).reshape(m_size * c_send, d)
+        recv_eid = jax.lax.all_to_all(send_eid.reshape(m_size, c_send),
+                                      model, 0, 0, tiled=False
+                                      ).reshape(m_size * c_send)
+
+        # ---- 4. second-stage local dispatch + expert GLU ----
+        tr = m_size * c_send
+        valid = recv_eid >= 0
+        eid_safe = jnp.where(valid, recv_eid, e_loc)
+        order2 = jnp.argsort(eid_safe, stable=True)
+        sorted_eid = eid_safe[order2]
+        counts2 = jnp.bincount(eid_safe, length=e_loc + 1)
+        starts2 = jnp.concatenate([jnp.zeros((1,), counts2.dtype),
+                                   jnp.cumsum(counts2)[:-1]])
+        pos2 = jnp.arange(tr, dtype=jnp.int32) - starts2[sorted_eid]
+        keep2 = (pos2 < c_loc) & (sorted_eid < e_loc)
+        slot2 = jnp.where(keep2, sorted_eid * c_loc + pos2, e_loc * c_loc)
+        buf = jnp.zeros((e_loc * c_loc, d), x.dtype
+                        ).at[slot2].set(recv_x[order2], mode="drop",
+                                        unique_indices=True)
+        expert_in = buf.reshape(e_loc, c_loc, d)
+
+        if serving:
+            # weight-stationary: contract full D against the local F-shard;
+            # only the final [E,C,D] partial is psum'd over data.
+            gate = jnp.einsum("ecd,edf->ecf", expert_in, we_gate)
+            up = jnp.einsum("ecd,edf->ecf", expert_in, we_up)
+            hh = jax.nn.silu(gate) * up                        # F/data shard
+            out = jnp.einsum("ecf,efd->ecd", hh, we_down)
+            if "data" in mesh.shape and mesh.shape["data"] > 1:
+                out = jax.lax.psum(out, "data")
+        else:
+            # FSDP: gather expert weights over the data axis (D dim) and,
+            # when present, the pod axis (F dim) -- transposes are RS.
+            wg = we_gate
+            wu = we_up
+            wd = we_down
+            if "data" in mesh.shape and mesh.shape["data"] > 1:
+                wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+                wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+                wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+            if pod_fsdp:
+                wg = jax.lax.all_gather(wg, "pod", axis=2, tiled=True)
+                wu = jax.lax.all_gather(wu, "pod", axis=2, tiled=True)
+                wd = jax.lax.all_gather(wd, "pod", axis=1, tiled=True)
+            gate = jnp.einsum("ecd,edf->ecf", expert_in, wg)
+            up = jnp.einsum("ecd,edf->ecf", expert_in, wu)
+            hh = jax.nn.silu(gate) * up
+            out = jnp.einsum("ecf,efd->ecd", hh, wd)           # [E_loc,C,D]
+
+        out_sorted = out.reshape(e_loc * c_loc, d
+                                 ).at[slot2].get(mode="fill", fill_value=0)
+        inv2 = jnp.argsort(order2, stable=True)
+        out_recv = out_sorted[inv2]                             # [tr, D]
+
+        # ---- 5. ship back + combine ----
+        back = jax.lax.all_to_all(out_recv.reshape(m_size, c_send, d),
+                                  model, 0, 0, tiled=False
+                                  ).reshape(m_size * c_send, d)
+        ch = slot_choice
+        w = jnp.where(ch >= 0, w_flat[jnp.maximum(ch, 0)], 0.0)
+        tok = jnp.where(ch >= 0, token_of[jnp.maximum(ch, 0)], 0)
+        y = jax.ops.segment_sum(back.astype(jnp.float32) * w[:, None],
+                                tok, num_segments=tl)
+        if sliced:
+            y = jax.lax.all_gather(y, model, axis=0, tiled=True)
+        if serving and data_size > 1:
+            # identical on every data row: take this row's batch slice
+            didx = jax.lax.axis_index("data")
+            y = jax.lax.dynamic_slice_in_dim(y, didx * t_local, t_local, 0)
+        y = y.reshape(bl, sl, d).astype(x.dtype)
+
+        # ---- shared experts (Megatron-style, model-sharded hidden) ----
+        if shared is not None:
+            sg, su, sd = shared["w_gate"], shared["w_up"], shared["w_down"]
+            if not serving and "data" in mesh.shape and mesh.shape["data"] > 1:
+                sg = jax.lax.all_gather(sg, "data", axis=0, tiled=True)
+                su = jax.lax.all_gather(su, "data", axis=0, tiled=True)
+                sd = jax.lax.all_gather(sd, "data", axis=1, tiled=True)
+            xin = xf_local if serving else xf_full
+            hsh = jax.nn.silu(xin @ sg) * (xin @ su)        # [t, Fsh/M]
+            ysh = jax.lax.psum(hsh @ sd, model)             # [t, D]
+            y = y + ysh.reshape(bl, sl, d).astype(x.dtype)
+
+        # ---- aux (globally reduced) ----
+        # When sliced, token stats are distinct per model peer: reduce over
+        # dp + model.  When duplicated (tiny decode batches), reduce over dp
+        # only and divide the doubly-counted kept2 by M.
+        red_axes = dp + (model,) if sliced else dp
+        dup = 1.0 if sliced else float(m_size)
+        kept2 = jax.lax.psum(keep2.sum().astype(jnp.float32),
+                             dp + (model,)) / dup
+        total = jax.lax.psum(jnp.float32(tl * k), red_axes) if red_axes \
+            else jnp.float32(tl * k)
+        probs_sum = jax.lax.psum(probs.sum(0), red_axes) if red_axes \
+            else probs.sum(0)
+        counts_e = jnp.bincount(e_flat,
+                                length=moe.num_experts).astype(jnp.float32)
+        if red_axes:
+            counts_e = jax.lax.psum(counts_e, red_axes)
+        f_e = counts_e / jnp.maximum(total, 1.0)
+        p_e = probs_sum / jnp.maximum(total / k, 1.0)
+        z_loc = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        z_mean = jax.lax.pmean(z_loc, red_axes) if red_axes else z_loc
+        aux = {
+            "load_balance_loss": moe.num_experts * jnp.sum(f_e * p_e),
+            "router_z_loss": moe.router_z_loss * z_mean,
+            "drop_fraction": 1.0 - kept2 / jnp.maximum(total, 1.0),
+        }
+        return y, aux
+
+    shared = params.get("shared")
+    data_ax = "data" if "data" in mesh.shape else None
+    pod_fsdp = (not serving and "pod" in mesh.shape
+                and mesh.shape["pod"] > 1 and f % mesh.shape["pod"] == 0)
+    pod_ax = "pod" if pod_fsdp else None
+    if serving:
+        ff_ax = data_ax if (data_ax and f % mesh.shape["data"] == 0) \
+            else None
+        in_specs = (
+            P(dp if dp else None, None, None),        # x
+            P(None, None),                            # router
+            P(model, None, ff_ax),                    # we_gate [E, D, F]
+            P(model, None, ff_ax),                    # we_up
+            P(model, ff_ax, None),                    # we_down [E, F, D]
+        )
+    else:
+        in_specs = (
+            P(dp if dp else None, None, None),        # x
+            P(None, None),                            # router
+            P(model, data_ax, pod_ax),                # we_gate [E, D, F]
+            P(model, data_ax, pod_ax),                # we_up
+            P(model, pod_ax, data_ax),                # we_down [E, F, D]
+        )
+    shared_spec = None
+    if shared is not None:
+        sh_d = None if serving else (dp[-1] if dp else None)
+        shared_spec = {
+            "w_gate": P(sh_d, model),
+            "w_up": P(sh_d, model),
+            "w_down": P(model, sh_d),
+        }
+    aux_spec = {"load_balance_loss": P(), "router_z_loss": P(),
+                "drop_fraction": P()}
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=in_specs + (shared_spec,),
+        out_specs=(P(dp if dp else None, None, None), aux_spec),
+        check_vma=False)
+    return fn(x, params["router"], params["we_gate"], params["we_up"],
+              params["we_down"], shared)

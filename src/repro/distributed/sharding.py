@@ -1,0 +1,272 @@
+"""Logical-axis sharding rules (GSPMD via NamedSharding).
+
+Every parameter / activation dimension carries a *logical* name; this module
+maps logical names to physical mesh axes with a **divisibility fallback**:
+a dimension is only sharded if its size divides by the mesh-axis product,
+otherwise the annotation is dropped (replicated).  This is what lets the
+same rule set serve 10 heterogeneous architectures (10-head models on a
+16-way tensor axis, a 49,155 vocab, kv=1 MQA, ...) without per-arch
+special-casing -- the physical padding lives only where we chose it
+deliberately (vocab rounding).
+
+Rule set (DESIGN.md section 5):
+
+  batch       -> ("pod", "data")   data parallel over both pod and data axes
+  vocab       -> model             embedding/logits vocab-sharded
+  fsdp        -> data              weight d_model dim: ZeRO-3 style FSDP
+  heads_flat  -> model             fused H*hd projections: tensor parallel
+  mlp         -> model             FFN hidden
+  experts     -> model             expert parallelism
+  kv_heads    -> model             KV cache heads (falls back to replicate)
+  seq         -> None              (sequence-parallel is a perf knob; see
+                                    EXPERIMENTS.md section Perf)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "vocab": ("model",),
+    "fsdp": ("data",),
+    "heads_flat": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "kv_heads": ("model",),
+    "kv_seq": ("model",),
+    "lru": ("model",),
+    # expert FFN hidden dim: E takes model, D takes data -- the pod axis is
+    # the only one left, giving ZeRO-3-over-pods for the 1T MoE (without
+    # this, expert params/grads replicate across pods and kimi-k2 cannot
+    # fit the 512-chip mesh; see EXPERIMENTS.md).
+    "expert_ff": ("pod",),
+}
+
+# Serving (decode) layout: weight-stationary pure tensor parallelism.
+# FSDP is the right call for training (gathers amortize over ~1M tokens per
+# step) but catastrophic for decode: one token per sequence cannot amortize
+# re-gathering the whole model (measured 246 GB wire/step on kimi-k2
+# decode_32k -- see EXPERIMENTS.md section Perf).  Here every weight dim
+# shards across BOTH mesh axes where divisible and nothing is ever
+# gathered; activations psum instead (tiny at decode batch sizes).
+SERVING_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "vocab": ("model", "data"),
+    "fsdp": (),              # the d_model dim of weights is never sharded --
+    #                          nothing is ever FSDP-gathered at decode
+    "heads_flat": ("model", "data"),   # 2-D tensor parallelism instead:
+    "mlp": ("model", "data"),          # weight *columns* split across both
+    "lru": ("model", "data"),          # axes; activations are tiny at decode
+    "experts": ("model",),
+    "kv_heads": ("model",),
+    "kv_seq": ("model",),
+    "expert_ff": ("data",),  # experts stay fully sharded: E x model, F x data
+}
+
+
+def _mesh_axes_for(logical: Optional[str], mesh: Mesh,
+                   rules=None) -> tuple[str, ...]:
+    if logical is None:
+        return ()
+    axes = (rules or LOGICAL_RULES).get(logical, ())
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def spec_for_shape(shape, logical_axes, mesh: Mesh, rules=None) -> P:
+    """PartitionSpec for ``shape`` given logical axis names (right-aligned:
+    ``logical_axes`` may be shorter than the rank; leading dims replicate).
+    Divisibility fallback + no-axis-reuse are enforced here."""
+    rank = len(shape)
+    names: list = [None] * rank
+    offset = rank - len(logical_axes)
+    used: set[str] = set()
+    for i, logical in enumerate(logical_axes):
+        dim = offset + i
+        axes = _mesh_axes_for(logical, mesh, rules)
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            continue
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        if total > 1 and shape[dim] % total == 0:
+            names[dim] = axes if len(axes) > 1 else axes[0]
+            used.update(axes)
+        else:
+            # try a prefix of the axis tuple (e.g. batch on ("pod","data")
+            # where only "pod" divides)
+            for cut in range(len(axes) - 1, 0, -1):
+                sub = axes[:cut]
+                tot = int(np.prod([mesh.shape[a] for a in sub]))
+                if tot > 1 and shape[dim] % tot == 0:
+                    names[dim] = sub if len(sub) > 1 else sub[0]
+                    used.update(sub)
+                    break
+    return P(*names)
+
+
+def named_sharding(shape, logical_axes, mesh: Mesh,
+                   rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for_shape(shape, logical_axes, mesh,
+                                              rules))
+
+
+def make_constrainer(mesh: Optional[Mesh], moe_impl: str = "ep",
+                     rules=None):
+    """-> constrain(x, *logical_names) applying with_sharding_constraint.
+
+    The hook also carries ``mesh`` and ``moe_impl`` attributes so modules
+    that need explicit collectives (distributed/moe_ep.py) can find the
+    mesh without threading it through every signature."""
+    serving = rules is SERVING_RULES
+    if mesh is None:
+        fn = lambda x, *names: x
+        fn.mesh = None
+        fn.moe_impl = moe_impl
+        fn.serving = serving
+        return fn
+
+    def constrain(x, *names):
+        spec = spec_for_shape(x.shape, names, mesh, rules)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    constrain.mesh = mesh
+    constrain.moe_impl = moe_impl
+    constrain.serving = serving
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# parameter logical axes (path-pattern -> logical names of trailing dims)
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES: tuple[tuple[str, tuple], ...] = (
+    # order matters: first match wins
+    ("embed", ("vocab", "fsdp")),
+    ("head", ("fsdp", "vocab")),
+    ("frontend", (None, "fsdp")),
+    ("router", ("fsdp", "experts")),
+    ("w_gate", ("fsdp", "mlp")),        # dense mlp [D, F]
+    ("w_up", ("fsdp", "mlp")),
+    ("w_down", ("mlp", "fsdp")),
+    ("wq", ("fsdp", "heads_flat")),
+    ("wk", ("fsdp", "heads_flat")),
+    ("wv", ("fsdp", "heads_flat")),
+    ("wo", ("heads_flat", "fsdp")),
+    ("bq", ("heads_flat",)),
+    ("bk", ("heads_flat",)),
+    ("bv", ("heads_flat",)),
+    ("w_in", ("fsdp", "heads_flat")),   # ssm fused in-proj
+    ("w_x_branch", ("fsdp", "lru")),
+    ("w_gate_branch", ("fsdp", "lru")),
+    ("w_out", ("lru", "fsdp")),         # ssm/rglru out-proj
+    ("conv_w", (None, "lru")),
+)
+
+_MOE_EXPERT = {"we_gate": ("experts", "fsdp", "expert_ff"),
+               "we_up": ("experts", "fsdp", "expert_ff"),
+               "we_down": ("experts", "expert_ff", "fsdp")}
+
+
+def _leaf_logical(path_str: str, ndim: int) -> tuple:
+    parts = path_str.split("/")
+    last = parts[-1]
+    # optimizer-state leaves inherit the parent param's logical axes:
+    #   mu/nu mirror the param tree (same leaf name, handled below);
+    #   adafactor's factored moments drop one trailing dim each.
+    if last in ("vr", "vc", "v") and len(parts) >= 2:
+        base = _leaf_logical("/".join(parts[:-1]), ndim + 1)
+        if not base:
+            return ()
+        if last == "vr":                      # param.shape[:-1]
+            return base[:-1]
+        if last == "vc":                      # param.shape[:-2] + [-1]
+            return base[:-2] + base[-1:] if len(base) >= 2 else base
+        return base                           # unfactored: same shape
+    if last in _MOE_EXPERT:
+        return _MOE_EXPERT[last]
+    for name, logical in _PARAM_RULES:
+        if last == name:
+            return logical
+    return ()
+
+
+def path_to_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_shardings(abstract_params, mesh: Mesh, rules=None):
+    """Pytree of NamedSharding matching an (abstract) param tree."""
+
+    def leaf(path, x):
+        logical = _leaf_logical(path_to_str(path), len(x.shape))
+        return named_sharding(x.shape, logical, mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_params)
+
+
+def cache_shardings(abstract_caches, mesh: Mesh):
+    """KV caches: batch on (pod,data); heads on model when divisible,
+    otherwise the *sequence* dim shards on model (decode context
+    parallelism: the attention contraction over the sharded cache length
+    reduces locally + one tiny psum of [B,H,1] logits -- this is what keeps
+    an 8-kv-head cache from replicating 86 GB/device on a 16-way model
+    axis; see EXPERIMENTS.md section Dry-run)."""
+    model_size = mesh.shape.get("model", 1)
+
+    def kv_spec(shape):
+        lead = (None,) * (len(shape) - 4)
+        kv_heads = shape[-2]
+        if model_size > 1 and kv_heads % model_size == 0:
+            return lead + ("batch", None, "kv_heads", None)
+        if model_size > 1 and shape[-3] % model_size == 0:
+            return lead + ("batch", "kv_seq", None, None)
+        return lead + ("batch", None, None, None)
+
+    def leaf(path, x):
+        p = path_to_str(path)
+        last = p.rsplit("/", 1)[-1]
+        shape = x.shape
+        if last in ("k", "v"):
+            return named_sharding(shape, kv_spec(shape), mesh)
+        if last == "pos":
+            spec = kv_spec(x.shape + (1, 1))[:-2]
+            return named_sharding(shape, spec, mesh)
+        if last == "h":      # ssm [B,H,P,N] / rglru [B,W]
+            if len(shape) >= 4:
+                return named_sharding(shape, (None,) * (len(shape) - 4)
+                                      + ("batch", "heads_flat", None, None),
+                                      mesh)
+            return named_sharding(shape, (None,) * (len(shape) - 2)
+                                  + ("batch", "lru"), mesh)
+        if last == "conv":
+            return named_sharding(shape, (None,) * (len(shape) - 3)
+                                  + ("batch", None, "lru"), mesh)
+        return named_sharding(shape, (), mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_caches)
+
+
+def batch_shardings(abstract_batch, mesh: Mesh):
+    """Input batches: leading dim is batch -> (pod, data)."""
+
+    def leaf(x):
+        return named_sharding(x.shape, ("batch",) + (None,) * (len(x.shape) - 1),
+                              mesh)
+
+    return jax.tree_util.tree_map(leaf, abstract_batch)

@@ -1,0 +1,221 @@
+"""Static-shape graph containers for JAX.
+
+The paper's pipeline moves between three representations:
+
+  edge list  ->  DOK (construction)  ->  CSR (compute)
+
+JAX needs static shapes, so the DOK stage (a host-side dict) is replaced by
+device-side bucketing, and CSR's variable-length rows are replaced by a padded
+ELL tiling (fixed max-degree blocks) that maps onto VMEM tiles.  The edge list
+remains the canonical interchange format, exactly as in the paper.
+
+Conventions
+-----------
+* Edge lists are *directed* internally: an undirected edge {i, j} is stored as
+  the two entries (i, j, w) and (j, i, w).  ``symmetrize`` converts.
+* Padding edges have ``weight == 0`` and ``src == dst == 0`` -- weight-zero
+  contributions are exact no-ops for every GEE formula, so padded arrays give
+  bit-identical results to unpadded ones.
+* Unknown labels are ``-1`` (GEE's semi-supervised convention): such nodes get
+  a zero row in W but still receive an embedding row in Z.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeList:
+    """Padded, device-resident edge list.
+
+    Attributes:
+      src:     [E_pad] int32 source node ids.
+      dst:     [E_pad] int32 destination node ids.
+      weight:  [E_pad] float32 edge weights (0 for padding slots).
+      num_nodes: static int, N.
+      num_edges: static int, number of *valid* (non-padding) entries.
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    weight: jax.Array
+    num_nodes: int = dataclasses.field(metadata=dict(static=True))
+    num_edges: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def padded_size(self) -> int:
+        return int(self.src.shape[0])
+
+    def with_padding(self, multiple: int) -> "EdgeList":
+        """Pad the arrays so E_pad is a multiple of ``multiple``."""
+        e = self.padded_size
+        target = ((e + multiple - 1) // multiple) * multiple
+        if target == e:
+            return self
+        pad = target - e
+        z32 = jnp.zeros((pad,), jnp.int32)
+        zf = jnp.zeros((pad,), jnp.float32)
+        return EdgeList(
+            src=jnp.concatenate([self.src, z32]),
+            dst=jnp.concatenate([self.dst, z32]),
+            weight=jnp.concatenate([self.weight, zf]),
+            num_nodes=self.num_nodes,
+            num_edges=self.num_edges,
+        )
+
+
+def edge_list_from_numpy(
+    src: np.ndarray,
+    dst: np.ndarray,
+    weight: np.ndarray | None,
+    num_nodes: int,
+    pad_to: int | None = None,
+) -> EdgeList:
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    if weight is None:
+        weight = np.ones(src.shape, np.float32)
+    weight = np.asarray(weight, np.float32)
+    e = src.shape[0]
+    size = e if pad_to is None else max(pad_to, e)
+    s = np.zeros((size,), np.int32)
+    d = np.zeros((size,), np.int32)
+    w = np.zeros((size,), np.float32)
+    s[:e], d[:e], w[:e] = src, dst, weight
+    return EdgeList(
+        src=jnp.asarray(s), dst=jnp.asarray(d), weight=jnp.asarray(w),
+        num_nodes=int(num_nodes), num_edges=int(e),
+    )
+
+
+def symmetrize(edges: EdgeList) -> EdgeList:
+    """Turn a one-entry-per-undirected-edge list into a directed list.
+
+    Self loops are kept single.  Padding entries stay padding (weight 0).
+    """
+    src, dst, w = edges.src, edges.dst, edges.weight
+    loop = src == dst
+    # Reverse copies of non-loop edges; loops/padding contribute weight 0.
+    rw = jnp.where(loop, 0.0, w)
+    return EdgeList(
+        src=jnp.concatenate([src, dst]),
+        dst=jnp.concatenate([dst, src]),
+        weight=jnp.concatenate([w, rw]),
+        num_nodes=edges.num_nodes,
+        num_edges=2 * edges.num_edges,  # upper bound; loops counted twice-as-0
+    )
+
+
+def add_self_loops(edges: EdgeList, value: float = 1.0) -> EdgeList:
+    """Diagonal augmentation: A + I as an edge-list concatenation."""
+    n = edges.num_nodes
+    ids = jnp.arange(n, dtype=jnp.int32)
+    return EdgeList(
+        src=jnp.concatenate([edges.src, ids]),
+        dst=jnp.concatenate([edges.dst, ids]),
+        weight=jnp.concatenate([edges.weight, jnp.full((n,), value, jnp.float32)]),
+        num_nodes=n,
+        num_edges=edges.num_edges + n,
+    )
+
+
+def degrees(edges: EdgeList) -> jax.Array:
+    """Weighted out-degree per node, [N] float32.
+
+    For a symmetrized list this equals the usual graph degree.  Padding edges
+    have weight zero so they contribute nothing.
+    """
+    return jax.ops.segment_sum(
+        edges.weight, edges.src, num_segments=edges.num_nodes
+    )
+
+
+def to_dense(edges: EdgeList) -> jax.Array:
+    """Materialize the (directed) adjacency matrix.  Test/oracle use only."""
+    n = edges.num_nodes
+    a = jnp.zeros((n, n), jnp.float32)
+    return a.at[edges.src, edges.dst].add(edges.weight)
+
+
+# ---------------------------------------------------------------------------
+# CSR (host side, for paper-faithful SciPy comparisons + ELL conversion)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CSRHost:
+    """Host-side CSR mirror of scipy.sparse.csr_array, used by benchmarks."""
+
+    indptr: np.ndarray   # [N+1] int64
+    indices: np.ndarray  # [E] int32
+    data: np.ndarray     # [E] float32
+    shape: Tuple[int, int]
+
+
+def edges_to_csr_host(edges: EdgeList) -> CSRHost:
+    n = edges.num_nodes
+    src = np.asarray(edges.src)[: edges.num_edges]
+    dst = np.asarray(edges.dst)[: edges.num_edges]
+    w = np.asarray(edges.weight)[: edges.num_edges]
+    order = np.argsort(src, kind="stable")
+    src, dst, w = src[order], dst[order], w[order]
+    counts = np.bincount(src, minlength=n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return CSRHost(indptr=indptr, indices=dst.astype(np.int32),
+                   data=w.astype(np.float32), shape=(n, n))
+
+
+# ---------------------------------------------------------------------------
+# ELL tiling (the TPU-native re-blocking of CSR; consumed by the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ELL:
+    """Fixed-max-degree row-major tiling.
+
+    cols: [N_pad, D_max] int32 neighbor ids (0 in padding slots).
+    vals: [N_pad, D_max] float32 edge weights (0 in padding slots).
+    num_nodes: static N (<= N_pad).
+    """
+
+    cols: jax.Array
+    vals: jax.Array
+    num_nodes: int = dataclasses.field(metadata=dict(static=True))
+
+
+def edges_to_ell(edges: EdgeList, row_pad: int = 8,
+                 max_degree: int | None = None) -> ELL:
+    """Host-side conversion edge list -> ELL.  Rows above max_degree are
+    truncated only if ``max_degree`` is given (tests never truncate)."""
+    n = edges.num_nodes
+    src = np.asarray(edges.src)[: edges.num_edges]
+    dst = np.asarray(edges.dst)[: edges.num_edges]
+    w = np.asarray(edges.weight)[: edges.num_edges]
+    keep = w != 0
+    src, dst, w = src[keep], dst[keep], w[keep]
+    counts = np.bincount(src, minlength=n)
+    dmax = int(counts.max()) if counts.size else 1
+    if max_degree is not None:
+        dmax = min(dmax, max_degree)
+    dmax = max(dmax, 1)
+    n_pad = ((n + row_pad - 1) // row_pad) * row_pad
+    cols = np.zeros((n_pad, dmax), np.int32)
+    vals = np.zeros((n_pad, dmax), np.float32)
+    # Vectorized slot assignment: sort edges by row, slot = rank within row.
+    order = np.argsort(src, kind="stable")
+    src, dst, w = src[order], dst[order], w[order]
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    slot = np.arange(src.size, dtype=np.int64) - indptr[src]
+    keep2 = slot < dmax
+    cols[src[keep2], slot[keep2]] = dst[keep2]
+    vals[src[keep2], slot[keep2]] = w[keep2]
+    return ELL(cols=jnp.asarray(cols), vals=jnp.asarray(vals), num_nodes=n)

@@ -1,0 +1,33 @@
+"""Edge partitioning for the distributed GEE path.
+
+Sharding strategy (DESIGN.md section 5): edges are 1-D sharded across the
+data-parallel mesh axes.  Each shard is padded to the common length so the
+global array is rectangular; padding entries carry weight 0 (exact no-ops).
+
+Balance: a random permutation before splitting equalizes both edge counts and
+expected per-class mass across shards, which keeps the per-device partial
+segment-sums balanced (straggler mitigation at the data level).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.containers import EdgeList, edge_list_from_numpy
+
+
+def shard_edges(edges: EdgeList, num_shards: int, seed: int = 0,
+                pad_multiple: int = 8) -> EdgeList:
+    """Return an EdgeList whose arrays are padded to num_shards * L and
+    shuffled, ready to be sharded as [num_shards, L] along axis 0."""
+    e = edges.num_edges
+    src = np.asarray(edges.src)[:e]
+    dst = np.asarray(edges.dst)[:e]
+    w = np.asarray(edges.weight)[:e]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(e)
+    src, dst, w = src[perm], dst[perm], w[perm]
+    per = -(-e // num_shards)
+    per = ((per + pad_multiple - 1) // pad_multiple) * pad_multiple
+    total = per * num_shards
+    return edge_list_from_numpy(src, dst, w, edges.num_nodes, pad_to=total)

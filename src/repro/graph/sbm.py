@@ -1,0 +1,95 @@
+"""Stochastic Block Model graph generator (paper section 4, Fig. 2).
+
+The paper simulates SBM graphs with 3 classes, class priors [0.2, 0.3, 0.5],
+within-class probability 0.13 and between-class probability 0.1, at node
+counts 100 / 1k / 3k / 5k / 10k.  ``sample_sbm`` reproduces exactly that
+family; the defaults are the paper's.
+
+Sampling is done in O(E) expected time per block pair (geometric skipping)
+rather than O(N^2) coin flips, so the 10k-node / 5.6M-edge graph from the
+paper generates in seconds on this container.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.graph.containers import EdgeList, edge_list_from_numpy
+
+PAPER_PRIORS = (0.2, 0.3, 0.5)
+PAPER_P_WITHIN = 0.13
+PAPER_P_BETWEEN = 0.10
+
+
+@dataclasses.dataclass(frozen=True)
+class SBMSample:
+    edges: EdgeList          # directed (symmetrized) edge list
+    labels: np.ndarray       # [N] int32
+    num_classes: int
+
+
+def _sample_pairs_block(rng: np.random.Generator, rows: np.ndarray,
+                        cols: np.ndarray, p: float,
+                        upper_only: bool) -> tuple[np.ndarray, np.ndarray]:
+    """Sample Bernoulli(p) entries of the |rows| x |cols| block via geometric
+    skipping; returns (i, j) global index arrays for present edges."""
+    nr, nc = rows.size, cols.size
+    total = nr * nc
+    if total == 0 or p <= 0.0:
+        return np.empty(0, np.int64), np.empty(0, np.int64)
+    # Expected edges p*total; sample flat indices by geometric gaps.
+    out = []
+    pos = -1
+    log1mp = np.log1p(-p)
+    # Draw in chunks for speed.
+    est = int(p * total * 1.2) + 16
+    while True:
+        u = rng.random(est)
+        gaps = np.floor(np.log(u) / log1mp).astype(np.int64) + 1
+        idx = pos + np.cumsum(gaps)
+        take = idx < total
+        out.append(idx[take])
+        if not take.all():
+            break
+        pos = int(idx[-1])
+    flat = np.concatenate(out) if out else np.empty(0, np.int64)
+    bi, bj = flat // nc, flat % nc
+    gi, gj = rows[bi], cols[bj]
+    if upper_only:
+        keep = gi < gj
+        gi, gj = gi[keep], gj[keep]
+    return gi, gj
+
+
+def sample_sbm(
+    num_nodes: int,
+    priors: Sequence[float] = PAPER_PRIORS,
+    p_within: float = PAPER_P_WITHIN,
+    p_between: float = PAPER_P_BETWEEN,
+    seed: int = 0,
+    pad_to: int | None = None,
+) -> SBMSample:
+    rng = np.random.default_rng(seed)
+    k = len(priors)
+    labels = rng.choice(k, size=num_nodes, p=np.asarray(priors)).astype(np.int32)
+    order = np.argsort(labels, kind="stable")
+    # Node ids grouped by class for block sampling, then mapped back.
+    groups = [order[labels[order] == c] for c in range(k)]
+    src_all, dst_all = [], []
+    for a in range(k):
+        for b in range(a, k):
+            p = p_within if a == b else p_between
+            gi, gj = _sample_pairs_block(
+                rng, groups[a], groups[b], p, upper_only=(a == b))
+            src_all.append(gi)
+            dst_all.append(gj)
+    src = np.concatenate(src_all)
+    dst = np.concatenate(dst_all)
+    # one entry per undirected edge -> symmetrize to directed
+    s = np.concatenate([src, dst]).astype(np.int32)
+    d = np.concatenate([dst, src]).astype(np.int32)
+    edges = edge_list_from_numpy(s, d, None, num_nodes, pad_to=pad_to)
+    return SBMSample(edges=edges, labels=labels, num_classes=k)

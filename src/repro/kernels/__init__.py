@@ -1,0 +1,5 @@
+from repro.kernels.gee_spmm import gee_spmm
+from repro.kernels.row_norm import row_norm
+from repro.kernels.ops import gee_pallas, gee_pallas_from_ell
+
+__all__ = ["gee_spmm", "row_norm", "gee_pallas", "gee_pallas_from_ell"]

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: GEE sparse matmul as a masked dense contraction.
+
+TPU adaptation of the paper's CSR SpMM (DESIGN.md section 2, tier 2): CSR's
+pointer-walk is serial and gather-heavy -- hostile to the MXU.  We re-block
+the sparse structure as fixed-width ELL tiles and turn the scatter into a
+batched matvec that lands on the MXU:
+
+    z[r, k] = sum_d contrib[r, d] * onehot(ylab[r, d])[k]
+
+Per grid step the kernel loads one (ROWS x DEG) tile of neighbor classes
+(``ylab``, int32) and contributions (``contrib``, f32) into VMEM, builds the
+one-hot mask in VREGs via an iota comparison (no K-sized table in memory),
+and contracts over the degree axis with ``jax.lax.dot_general`` batched over
+rows.  The K axis is padded to the 128-lane boundary so the contraction is
+hardware-aligned.
+
+Grid: (row_tiles, deg_tiles); the output block is revisited along the degree
+axis (accumulate pattern: initialize at j == 0, add afterwards).
+
+VMEM budget per step (defaults ROWS=256, DEG=128, K<=128):
+  ylab 256*128*4 = 128 KiB, contrib 128 KiB, onehot VREG-resident,
+  out 256*128*4 = 128 KiB  ->  < 0.5 MiB of ~16 MiB VMEM; the one-hot
+  [ROWS, DEG, K] f32 intermediate is 256*128*128*4 = 16 MiB worst case, so
+  the kernel contracts in DEG-sub-chunks of 8 to keep live VREG state small.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128          # TPU lane width: last-dim alignment unit
+SUBLANE = 8         # f32 sublane height
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _gee_spmm_kernel(ylab_ref, contrib_ref, out_ref, *, num_classes_pad: int,
+                     deg_sub: int):
+    """One (row_tile, deg_tile) step: out[r, k] += sum_d c[r,d]*[ylab==k]."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ylab = ylab_ref[...]                       # [R, D] int32
+    contrib = contrib_ref[...]                 # [R, D] f32
+    rows, deg = ylab.shape
+
+    acc = jnp.zeros((rows, num_classes_pad), jnp.float32)
+    # Sub-chunk the degree axis so the one-hot intermediate stays VREG-sized.
+    for d0 in range(0, deg, deg_sub):
+        yl = ylab[:, d0:d0 + deg_sub]                          # [R, ds]
+        cb = contrib[:, d0:d0 + deg_sub]                       # [R, ds]
+        iota = jax.lax.broadcasted_iota(
+            jnp.int32, (rows, deg_sub, num_classes_pad), 2)
+        onehot = (yl[:, :, None] == iota).astype(jnp.float32)  # [R, ds, K]
+        # Batched matvec over rows: contract the degree axis on the MXU.
+        acc = acc + jax.lax.dot_general(
+            cb, onehot,
+            dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    out_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "block_rows",
+                                             "block_deg", "deg_sub",
+                                             "interpret"))
+def gee_spmm(ylab: jax.Array, contrib: jax.Array, num_classes: int,
+             block_rows: int = 256, block_deg: int = 128, deg_sub: int = 8,
+             interpret: bool = True) -> jax.Array:
+    """ELL GEE contraction.  ylab [N, D] int32 (-1 pad), contrib [N, D] f32.
+
+    Returns [N, num_classes] f32.  Padding slots (ylab == -1) match no class
+    and contribute exactly 0, so padded and unpadded inputs agree bitwise.
+    """
+    n, d = ylab.shape
+    k_pad = _ceil_to(max(num_classes, 1), LANE)
+    n_pad = _ceil_to(max(n, 1), block_rows)
+    d_pad = _ceil_to(max(d, 1), block_deg)
+    deg_sub = min(deg_sub, d_pad)
+
+    ylab_p = jnp.full((n_pad, d_pad), -1, jnp.int32)
+    ylab_p = ylab_p.at[:n, :d].set(ylab.astype(jnp.int32))
+    contrib_p = jnp.zeros((n_pad, d_pad), jnp.float32)
+    contrib_p = contrib_p.at[:n, :d].set(contrib.astype(jnp.float32))
+
+    grid = (n_pad // block_rows, d_pad // block_deg)
+    out = pl.pallas_call(
+        functools.partial(_gee_spmm_kernel, num_classes_pad=k_pad,
+                          deg_sub=deg_sub),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_deg), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, block_deg), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, k_pad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, k_pad), jnp.float32),
+        interpret=interpret,
+    )(ylab_p, contrib_p)
+    return out[:n, :num_classes]

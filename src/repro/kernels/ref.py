@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here with identical semantics;
+tests sweep shapes/dtypes and assert allclose between kernel (interpret mode
+on CPU) and these oracles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gee_spmm_ref(ylab: jax.Array, contrib: jax.Array,
+                 num_classes: int) -> jax.Array:
+    """Oracle for the ELL GEE contraction.
+
+    ylab:    [N, D] int32 class of each neighbor slot; -1 = padding.
+    contrib: [N, D] float  per-slot contribution w_ij / n_k (0 in padding).
+    returns  [N, K] float32: z[r, k] = sum_d contrib[r, d] * (ylab[r, d] == k)
+    """
+    onehot = jax.nn.one_hot(ylab, num_classes, dtype=jnp.float32)  # [N,D,K]
+    return jnp.einsum("nd,ndk->nk", contrib.astype(jnp.float32), onehot)
+
+
+def row_norm_ref(z: jax.Array, eps: float = 1e-30) -> jax.Array:
+    """Row-wise L2 normalization; zero rows stay zero (paper's correlation)."""
+    z = z.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(z * z, axis=-1, keepdims=True))
+    return jnp.where(norm > 0, z / jnp.maximum(norm, eps), 0.0)
+
+
+def degree_scale_ref(vals: jax.Array, deg_src: jax.Array,
+                     deg_dst: jax.Array) -> jax.Array:
+    """Oracle for the fused Laplacian edge-weight scaling:
+    w <- w * d_src^-1/2 * d_dst^-1/2, with 0-degree guard."""
+    inv_s = jnp.where(deg_src > 0, jax.lax.rsqrt(jnp.maximum(deg_src, 1e-30)), 0.0)
+    inv_d = jnp.where(deg_dst > 0, jax.lax.rsqrt(jnp.maximum(deg_dst, 1e-30)), 0.0)
+    return (vals * inv_s * inv_d).astype(jnp.float32)

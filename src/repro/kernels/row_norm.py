@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: row-wise L2 normalization (GEE's correlation option).
+
+VPU work: per grid step load a (ROWS x K_pad) tile, compute the row norm with
+a lane reduction, and scale.  Zero rows map to zero rows (the paper's
+convention for isolated vertices).  K is padded to the 128-lane boundary with
+zeros, which leave the norm unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _row_norm_kernel(z_ref, out_ref, *, eps: float):
+    z = z_ref[...].astype(jnp.float32)
+    sq = jnp.sum(z * z, axis=-1, keepdims=True)
+    norm = jnp.sqrt(sq)
+    out_ref[...] = jnp.where(norm > 0, z / jnp.maximum(norm, eps), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def row_norm(z: jax.Array, block_rows: int = 512, eps: float = 1e-30,
+             interpret: bool = True) -> jax.Array:
+    """Row-wise L2 normalize [N, K] -> [N, K] f32; zero rows stay zero."""
+    n, k = z.shape
+    k_pad = _ceil_to(max(k, 1), LANE)
+    n_pad = _ceil_to(max(n, 1), block_rows)
+    zp = jnp.zeros((n_pad, k_pad), jnp.float32).at[:n, :k].set(
+        z.astype(jnp.float32))
+    out = pl.pallas_call(
+        functools.partial(_row_norm_kernel, eps=eps),
+        grid=(n_pad // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, k_pad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, k_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, k_pad), jnp.float32),
+        interpret=interpret,
+    )(zp)
+    return out[:n, :k]

@@ -1,0 +1,481 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs abstract params / optimizer state / inputs (ShapeDtypeStruct,
+     zero allocation) with NamedShardings from the logical rules,
+  3. ``jax.jit(step, in_shardings=..., out_shardings=...).lower(...)
+     .compile()`` -- any sharding mismatch, compile-time OOM or unsupported
+     collective fails the cell,
+  4. records ``compiled.memory_analysis()``, ``compiled.cost_analysis()``
+     and the collective-byte census parsed from the optimized HLO into a
+     JSON report consumed by benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+
+Hillclimb knobs (recorded into the report): --attn-impl, --microbatches,
+--remat, --optimizer.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, SHAPES, cell_is_runnable, get_config
+from repro.distributed.sharding import (SERVING_RULES, batch_shardings,
+                                        cache_shardings, make_constrainer,
+                                        param_shardings)
+from repro.launch import specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.serve.decode import make_serve_step
+from repro.train.loop import make_train_step
+from repro.train.optimizers import get_optimizer
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|s64|s32|s16|s8|u64|u32|u16|u8|"
+                       r"pred|c64|c128)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_census(hlo_text: str, default_group: int) -> dict:
+    """Parse per-device wire bytes for every collective in optimized HLO.
+
+    Wire-byte model (ring algorithms, per participating device):
+      all-gather       result * (P-1)/P
+      reduce-scatter   result * (P-1)        (result is the scattered piece)
+      all-reduce       result * 2(P-1)/P
+      all-to-all       result * (P-1)/P
+      collective-permute  result
+    """
+    census = {op: {"count": 0, "wire_bytes": 0.0, "payload_bytes": 0.0}
+              for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w\.\-]+ = (.+)", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op_match = re.search(
+            r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?\(", rhs)
+        if not op_match:
+            continue
+        if op_match.group(2) == "-done":
+            continue                      # counted at -start
+        op = op_match.group(1)
+        result_type = rhs.split(op_match.group(0))[0]
+        payload = _shape_bytes(result_type)
+        g = _GROUPS_RE.search(rhs)
+        if g:
+            p = int(g.group(2))
+        else:
+            gb = _GROUPS_BRACE_RE.search(rhs)
+            p = len(gb.group(1).split(",")) if gb else default_group
+        p = max(p, 2)
+        if op == "all-gather":
+            wire = payload * (p - 1) / p
+        elif op == "reduce-scatter":
+            wire = payload * (p - 1)
+        elif op == "all-reduce":
+            wire = payload * 2 * (p - 1) / p
+        elif op == "all-to-all":
+            wire = payload * (p - 1) / p
+        else:
+            wire = payload
+        census[op]["count"] += 1
+        census[op]["wire_bytes"] += wire
+        census[op]["payload_bytes"] += payload
+    census["total_wire_bytes"] = sum(
+        v["wire_bytes"] for v in census.values() if isinstance(v, dict))
+    return census
+
+
+def _attach(tree, shardings):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        tree, shardings)
+
+
+def choose_optimizer(cfg) -> str:
+    return "adafactor" if cfg.param_count() > 100e9 else "adamw"
+
+
+def choose_microbatches(cfg, shape) -> int:
+    if shape.kind != "train":
+        return 1
+    if cfg.d_model >= 8192:
+        return 16
+    if cfg.d_model >= 4096:
+        return 8
+    return 4
+
+
+def choose_remat(cfg, shape) -> str:
+    # Remat is on for every train cell: without it the online-softmax scan
+    # carries of all L layers stay live for the backward pass (measured
+    # 167 GB/device on qwen3-0.6b train_4k -- see EXPERIMENTS.md).
+    if shape.kind != "train":
+        return "none"
+    return "full"
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, attn_impl="auto",
+               microbatches=None, remat=None, optimizer=None,
+               compute_dtype=None, num_layers=None, unroll=False):
+    """-> (lowered, meta) for one cell.
+
+    ``num_layers``/``unroll`` serve the analysis pass: XLA's cost analysis
+    counts while-loop bodies ONCE (trip-count blind), so the corrected cost
+    is reconstructed from fully-unrolled depth-1/depth-2 lowerings by
+    differencing (see analysis_pass)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    overrides = {}
+    remat = remat if remat is not None else choose_remat(cfg, shape)
+    overrides["remat"] = remat
+    if compute_dtype:
+        overrides["compute_dtype"] = compute_dtype
+        overrides["param_dtype"] = compute_dtype
+    if num_layers is not None:
+        overrides["num_layers"] = num_layers
+    cfg = dataclasses.replace(cfg, **overrides)
+    # decode cells use the weight-stationary serving layout (see
+    # distributed/sharding.py SERVING_RULES + EXPERIMENTS.md section Perf);
+    # --rules overrides for the before/after comparison.
+    rules = None
+    if getattr(lower_cell, "_rules_override", None) == "train":
+        rules = None
+    elif (shape.kind == "decode"
+          and getattr(lower_cell, "_rules_override", None) != "train"):
+        rules = SERVING_RULES
+    constrain = make_constrainer(mesh, rules=rules)
+
+    p_abs = specs.abstract_params(cfg)
+    p_shard = param_shardings(p_abs, mesh, rules)
+    p_sds = _attach(p_abs, p_shard)
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": dict(mesh.shape),
+            "params": int(sum(x.size for x in jax.tree.leaves(p_abs))),
+            "param_bytes": specs.param_bytes(p_abs),
+            "attn_impl": attn_impl, "remat": remat}
+
+    if shape.kind == "train":
+        micro = 1 if unroll else (microbatches if microbatches is not None
+                                  else choose_microbatches(cfg, shape))
+        opt_name = optimizer or choose_optimizer(cfg)
+        opt = get_optimizer(opt_name, 1e-4)
+        o_abs = jax.eval_shape(opt.init, p_abs)
+        o_shard = param_shardings(o_abs, mesh)
+        o_sds = _attach(o_abs, o_shard)
+        batch = specs.train_input_specs(cfg, shape)
+        b_shard = batch_shardings(batch, mesh)
+        b_sds = _attach(batch, b_shard)
+        accum = "bfloat16" if cfg.param_count() > 500e9 else None
+        step = make_train_step(cfg, opt, microbatches=micro,
+                               attn_impl=attn_impl, constrain=constrain,
+                               attn_unroll=unroll, scan_unroll=unroll,
+                               grad_shardings=p_shard, accum_dtype=accum)
+        meta.update(optimizer=opt_name, microbatches=micro,
+                    opt_state_bytes=specs.param_bytes(o_abs))
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            ).lower(p_sds, o_sds, b_sds)
+        return lowered, meta
+
+    if shape.kind == "prefill":
+        batch = specs.prefill_input_specs(cfg, shape)
+        b_shard = batch_shardings(batch, mesh)
+        b_sds = _attach(batch, b_shard)
+        c_abs = jax.eval_shape(
+            lambda: lm.init_caches(cfg, shape.global_batch, shape.seq_len))
+        c_shard = cache_shardings(c_abs, mesh)
+
+        def prefill(params, b):
+            logits, caches, _ = lm.forward(
+                params, b, cfg, mode="prefill", attn_impl=attn_impl,
+                cache_len=shape.seq_len, constrain=constrain,
+                attn_unroll=unroll, scan_unroll=unroll)
+            return logits[:, -1:, :], caches
+
+        with mesh:
+            lowered = jax.jit(
+                prefill,
+                in_shardings=(p_shard, b_shard),
+                out_shardings=(None, c_shard),
+            ).lower(p_sds, b_sds)
+        return lowered, meta
+
+    # decode
+    caches, tokens_t, position = specs.decode_input_specs(cfg, shape)
+    c_shard = cache_shardings(caches, mesh)
+    c_sds = _attach(caches, c_shard)
+    t_shard = batch_shardings({"t": tokens_t}, mesh)["t"]
+
+    def serve_step(params, cch, tok, pos):
+        return lm.decode_step(params, tok, cch, pos, cfg,
+                              constrain=constrain, scan_unroll=unroll)
+
+    meta["cache_bytes"] = specs.param_bytes(caches)
+    with mesh:
+        lowered = jax.jit(
+            serve_step,
+            in_shardings=(p_shard, c_shard, t_shard, None),
+            out_shardings=(None, c_shard),
+            donate_argnums=(1,),
+        ).lower(p_sds, c_sds,
+                jax.ShapeDtypeStruct(tokens_t.shape, tokens_t.dtype,
+                                     sharding=t_shard),
+                position)
+    return lowered, meta
+
+
+def _cost_of(lowered) -> dict:
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    census = collective_census(compiled.as_text(), default_group=512)
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "wire": census["total_wire_bytes"],
+            "census": census}
+
+
+def analysis_pass(arch, shape_name, mesh, args) -> dict:
+    """Trip-count-corrected per-device cost (see lower_cell docstring).
+
+    Homogeneous stacks: lower depth-1 and depth-2 fully unrolled; the
+    difference is one layer's cost, reconstructed to L layers.  Hybrid
+    pattern models are python-loop (already unrolled): one full lowering
+    with unrolled attention suffices.
+    """
+    cfg = get_config(arch)
+    pattern = cfg.layer_pattern
+    homogeneous = cfg.scan_layers and len(set(pattern)) == 1
+    kw = dict(attn_impl=args.attn_impl, remat=args.remat,
+              optimizer=args.optimizer, compute_dtype=args.compute_dtype,
+              microbatches=args.microbatches, unroll=True)
+    if homogeneous:
+        c1 = _cost_of(lower_cell(arch, shape_name, mesh, num_layers=1,
+                                 **kw)[0])
+        c2 = _cost_of(lower_cell(arch, shape_name, mesh, num_layers=2,
+                                 **kw)[0])
+        L = cfg.num_layers
+        out = {}
+        for key in ("flops", "bytes", "wire"):
+            layer = max(c2[key] - c1[key], 0.0)
+            outside = max(c1[key] - layer, 0.0)
+            out[key] = outside + L * layer
+            out[key + "_layer"] = layer
+            out[key + "_outside"] = outside
+        out["method"] = "depth-differencing (L=1,2 unrolled)"
+        out["census_depth2"] = c2["census"]
+        return out
+    info = cfg.period_info
+    if info is not None and info[1] >= 2:
+        # periodic hybrid: difference one pattern period (L=plen vs 2*plen
+        # fully unrolled); total = c(tail) + n_per * period_cost.
+        period, n_per, tail = info
+        plen, tail_len = len(period), len(tail)
+        c_p = _cost_of(lower_cell(arch, shape_name, mesh,
+                                  num_layers=plen, **kw)[0])
+        c_2p = _cost_of(lower_cell(arch, shape_name, mesh,
+                                   num_layers=2 * plen, **kw)[0])
+        out = {}
+        c_t = None
+        if tail_len:
+            c_t = _cost_of(lower_cell(arch, shape_name, mesh,
+                                      num_layers=tail_len, **kw)[0])
+        for key in ("flops", "bytes", "wire"):
+            per = max(c_2p[key] - c_p[key], 0.0)
+            if tail_len:
+                out[key] = c_t[key] + n_per * per
+            else:
+                out[key] = c_p[key] + (n_per - 1) * per
+            out[key + "_layer"] = per / plen
+        out["method"] = (f"period-differencing (L={plen},{2*plen}"
+                         f"{',tail=' + str(tail_len) if tail_len else ''})")
+        out["census_depth2"] = c_2p["census"]
+        return out
+    c = _cost_of(lower_cell(arch, shape_name, mesh, **kw)[0])
+    return {"flops": c["flops"], "bytes": c["bytes"], "wire": c["wire"],
+            "method": "full unrolled lowering (python-loop model)",
+            "census_depth2": c["census"]}
+
+
+def run_cell(arch, shape_name, mesh, mesh_tag, args) -> dict:
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh_tag": mesh_tag,
+           "status": "ok"}
+    try:
+        lowered, meta = lower_cell(
+            arch, shape_name, mesh, attn_impl=args.attn_impl,
+            microbatches=args.microbatches, remat=args.remat,
+            optimizer=args.optimizer, compute_dtype=args.compute_dtype)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_info = {
+                "bytes_per_device": int(
+                    getattr(mem, "temp_size_in_bytes", 0)
+                    + getattr(mem, "argument_size_in_bytes", 0)
+                    + getattr(mem, "output_size_in_bytes", 0)
+                    - getattr(mem, "alias_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "argument_bytes": int(
+                    getattr(mem, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            }
+        except Exception as e:               # CPU backend may not support it
+            mem_info = {"error": str(e)}
+        hlo = compiled.as_text()
+        # Post-SPMD HLO shapes are per-device: census numbers below are
+        # per-device wire bytes already.
+        census = collective_census(hlo, default_group=512)
+        num_devices = 1
+        for v in meta["mesh"].values():
+            num_devices *= v
+        rec.update(meta)
+        rec.update(
+            seconds_lower=round(t_lower, 1),
+            seconds_compile=round(t_compile, 1),
+            flops_per_device_raw=float(cost.get("flops", -1)),
+            bytes_per_device_raw=float(cost.get("bytes accessed", -1)),
+            cost_analysis={k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float))},
+            memory=mem_info,
+            collectives=census,
+            hlo_bytes=len(hlo),
+            num_devices=num_devices,
+        )
+        if not args.no_analysis:
+            corrected = analysis_pass(arch, shape_name, mesh, args)
+            rec["corrected"] = corrected
+        if args.dump_hlo:
+            os.makedirs(args.dump_hlo, exist_ok=True)
+            fname = f"{arch}_{shape_name}_{mesh_tag}.hlo"
+            with open(os.path.join(args.dump_hlo, fname), "w") as f:
+                f.write(hlo)
+        cf = rec.get("corrected", {}).get("flops", -1)
+        cw = rec.get("corrected", {}).get("wire", -1)
+        print(f"[ok] {arch} x {shape_name} x {mesh_tag}: "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s  "
+              f"flops/dev {cf:.3e}  wire/dev {cw:.3e}B")
+        print(f"     memory_analysis: {mem_info}")
+        print(f"     cost_analysis(raw): flops={cost.get('flops')} "
+              f"bytes={cost.get('bytes accessed')}")
+    except Exception as e:
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[FAIL] {arch} x {shape_name} x {mesh_tag}: {e}")
+    rec["total_seconds"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--attn-impl", default="auto")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--compute-dtype", default=None)
+    ap.add_argument("--dump-hlo", default=None)
+    ap.add_argument("--no-analysis", action="store_true",
+                    help="skip the trip-count-corrected analysis pass")
+    ap.add_argument("--rules", choices=("auto", "train"), default="auto",
+                    help="auto: serving layout for decode cells; train: "
+                         "force the training layout everywhere (baseline)")
+    ap.add_argument("--tag", default=None,
+                    help="experiment tag recorded in each cell")
+    args = ap.parse_args()
+    if args.rules == "train":
+        lower_cell._rules_override = "train"
+
+    cells = []
+    archs = ARCH_NAMES if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    for arch in archs:
+        cfg = get_config(arch)
+        for sname in shapes:
+            ok, reason = cell_is_runnable(cfg, SHAPES[sname])
+            if ok:
+                cells.append((arch, sname))
+            else:
+                print(f"[skip] {arch} x {sname}: {reason}")
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    for mesh_tag, mesh in meshes:
+        for arch, sname in cells:
+            rec = run_cell(arch, sname, mesh, mesh_tag, args)
+            if args.tag:
+                rec["tag"] = args.tag
+            results = [r for r in results
+                       if not (r["arch"] == arch and r["shape"] == sname
+                               and r["mesh_tag"] == mesh_tag
+                               and r.get("tag") == args.tag)]
+            results.append(rec)
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    fails = [r for r in results if r["status"] == "fail"]
+    print(f"\n{len(results)} cells recorded, {len(fails)} failures")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

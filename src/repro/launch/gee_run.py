@@ -1,0 +1,81 @@
+"""GEE driver: the paper's pipeline as a CLI.
+
+  PYTHONPATH=src python -m repro.launch.gee_run --sbm 10000 --backend sparse_jax \
+      --lap --diag --cor
+  PYTHONPATH=src python -m repro.launch.gee_run --dataset citeseer --compare
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core.gee import GEEOptions, gee
+from repro.graph.datasets import TABLE2, load
+from repro.graph.sbm import sample_sbm
+
+
+def _time(fn, repeats=3):
+    fn()                                  # warmup / compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
+            else None
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sbm", type=int, default=None,
+                    help="SBM node count (paper's simulation)")
+    ap.add_argument("--dataset", default=None,
+                    help=f"one of {sorted(TABLE2)}")
+    ap.add_argument("--backend", default="sparse_jax",
+                    choices=("sparse_jax", "dense_jax", "scipy",
+                             "python_loop", "pallas"))
+    ap.add_argument("--lap", action="store_true")
+    ap.add_argument("--diag", action="store_true")
+    ap.add_argument("--cor", action="store_true")
+    ap.add_argument("--compare", action="store_true",
+                    help="time all backends")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.sbm:
+        s = sample_sbm(args.sbm, seed=args.seed)
+        edges, labels, k = s.edges, s.labels, s.num_classes
+        name = f"sbm-{args.sbm}"
+    else:
+        ds = load(args.dataset or "citeseer", seed=args.seed)
+        edges, labels, k = ds.edges, ds.labels, ds.spec.num_classes
+        name = ds.spec.name
+    opts = GEEOptions(laplacian=args.lap, diag_aug=args.diag,
+                      correlation=args.cor)
+    print(f"{name}: N={edges.num_nodes} E={edges.num_edges//2} K={k} "
+          f"[{opts.tag()}]")
+
+    backends = (("sparse_jax", "dense_jax", "scipy", "python_loop")
+                if args.compare else (args.backend,))
+    for b in backends:
+        if b == "python_loop" and edges.num_edges > 3_000_000:
+            print(f"  {b:12s}: skipped (too slow at this size)")
+            continue
+        if b == "pallas":
+            from repro.kernels.ops import gee_pallas
+            fn = lambda: gee_pallas(edges, labels, k, opts)
+        else:
+            fn = lambda: gee(edges, labels, k, opts, backend=b)
+        dt = _time(fn)
+        z = np.asarray(fn())
+        print(f"  {b:12s}: {dt*1e3:9.1f} ms   Z[{z.shape[0]}x{z.shape[1]}] "
+              f"norm {np.linalg.norm(z):.4f}")
+
+
+if __name__ == "__main__":
+    main()

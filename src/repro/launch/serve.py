@@ -1,0 +1,68 @@
+"""Serving driver: continuous-batching decode server over a reduced config.
+
+Demonstrates the full serving path end-to-end on CPU: bulk prefill, batched
+decode via the jit'd serve step, slot churn as requests finish at different
+lengths, and throughput accounting.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --requests 12 --slots 4 --max-new 24
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.batching import BatchedServer, Request
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if not cfg.has_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode step")
+    rng = np.random.default_rng(args.seed)
+    params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    server = BatchedServer(params, cfg, batch_slots=args.slots,
+                           max_len=args.max_len,
+                           temperature=args.temperature, seed=args.seed)
+    for uid in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=rng.integers(4, 12)).astype(np.int32)
+        server.submit(Request(uid=uid, prompt=prompt,
+                              max_new_tokens=rng.integers(
+                                  4, args.max_new + 1)))
+    t0 = time.perf_counter()
+    done = server.run()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.output) for r in done)
+    occ = np.mean(server.stats["batch_occupancy"]) if \
+        server.stats["batch_occupancy"] else 0.0
+    print(f"served {len(done)} requests, {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s), mean batch occupancy {occ:.2f}")
+    for r in done[:4]:
+        print(f"  req {r.uid}: prompt {len(r.prompt)} toks -> "
+              f"{len(r.output)} new toks {r.output[:8]}...")
+    return done
+
+
+if __name__ == "__main__":
+    main()

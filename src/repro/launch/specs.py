@@ -1,0 +1,60 @@
+"""Abstract input/state specs for lowering (no device allocation).
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of the given (architecture x assigned-shape) cell --
+weak-type-correct, shardable, zero bytes allocated.  The dry-run attaches
+NamedShardings and lowers against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.frontend == "frame":
+        return {"frames": _sds((b, s, cfg.frontend_dim), jnp.bfloat16),
+                "labels": _sds((b, s), I32)}
+    batch = {"tokens": _sds((b, s - cfg.frontend_tokens
+                             if cfg.frontend == "patch" else s), I32)}
+    if cfg.frontend == "patch":
+        batch["patches"] = _sds((b, cfg.frontend_tokens, cfg.frontend_dim),
+                                jnp.bfloat16)
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    return train_input_specs(cfg, shape)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """-> (caches_abstract, tokens_t, position).  The KV cache covers
+    ``shape.seq_len`` positions (the windowed/SSM archs keep O(window)/O(1)
+    state instead -- that is the point of the long_500k cell)."""
+    b, s = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(
+        lambda: lm.init_caches(cfg, b, s))
+    tokens_t = _sds((b, 1), I32)
+    position = _sds((), I32)
+    return caches, tokens_t, position
+
+
+def abstract_params(cfg: ModelConfig):
+    return lm.abstract_params(cfg)
+
+
+def param_bytes(tree) -> int:
+    return sum(x.size * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))

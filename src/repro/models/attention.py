@@ -1,0 +1,401 @@
+"""Grouped-query attention for every assigned arch, in three schedules.
+
+Schedules (selected by ``impl``; all numerically identical):
+
+  masked      baseline: scan over Q chunks x scan over KV chunks with an
+              online softmax; causal masking discards the upper triangle
+              *after* computing it (2x FLOP waste -- the honest baseline).
+  triangular  flash-style schedule: a single scan over the static list of
+              needed (q_chunk, kv_chunk) blocks (i >= j), so HLO FLOPs equal
+              the useful S^2/2.  This is a hillclimb change recorded in
+              EXPERIMENTS.md section Perf.
+  banded      sliding-window attention: scan over band offsets only --
+              O(S * W) FLOPs.  Used by the hybrid arch (recurrentgemma) and
+              anything with cfg.sliding_window.
+
+All paths use the online-softmax accumulator (running max / denominator), so
+no S x S tensor is ever materialized; per-step live memory is one
+[B, C, H, C] logits block.
+
+GQA is computed in grouped layout [B, S, KV, G, hd] (G = H // KV) so K/V are
+never repeated in memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rms_norm, truncated_normal_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, h, kv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": truncated_normal_init(ks[0], (d, h * hd), 1.0, dt),
+        "wk": truncated_normal_init(ks[1], (d, kv * hd), 1.0, dt),
+        "wv": truncated_normal_init(ks[2], (d, kv * hd), 1.0, dt),
+        "wo": truncated_normal_init(ks[3], (h * hd, d), 1.0, dt),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def _project_qkv(params, x, positions, cfg: ModelConfig,
+                 mrope_positions=None):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.attn_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q, k = apply_rope(q, k, positions, hd, cfg.rope_theta, cfg.rope,
+                      mrope_positions)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# online-softmax block update (shared by all schedules)
+# ---------------------------------------------------------------------------
+
+def _block_update(q_blk, k_blk, v_blk, mask, m, l, acc, scale):
+    """One (Q-block x KV-block) online-softmax step.
+
+    q_blk [B,C,KV,G,hd]  k_blk/v_blk [B,C2,KV,hd]  mask [B,1,1,C,C2] bool
+    m,l [B,KV,G,C]  acc [B,C,KV,G,hd]
+    """
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk.astype(jnp.float32),
+                   k_blk.astype(jnp.float32)) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))  # noqa: shadowing fine here
+    # guard fully-masked rows: keep m finite so exp() stays 0, not NaN
+    m_safe = jnp.where(m_new > NEG_INF / 2, m_new, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.where(m > NEG_INF / 2, jnp.exp(m - m_safe), 0.0)
+    l_new = l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqs,bskh->bqkgh", p, v_blk.astype(jnp.float32))
+    acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def _finalize(m, l, acc):
+    l_t = l.transpose(0, 3, 1, 2)[..., None]           # [B,C,KV,G,1]
+    return jnp.where(l_t > 0, acc / jnp.maximum(l_t, 1e-30), 0.0)
+
+
+def _chunk(x, n, c):
+    b = x.shape[0]
+    return x.reshape(b, n, c, *x.shape[2:])
+
+
+# ---------------------------------------------------------------------------
+# schedule 1: masked double scan (baseline)
+# ---------------------------------------------------------------------------
+
+def _attend_masked(q, k, v, pos_q, pos_k, cfg: ModelConfig, q_chunk,
+                   kv_chunk, unroll: bool = False):
+    b, s, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    nq, nk = s // q_chunk, sk // kv_chunk
+    scale = hd ** -0.5
+    qc = _chunk(q, nq, q_chunk)                       # [B,nq,C,KV,G,hd]
+    kc = _chunk(k, nk, kv_chunk)
+    vc = _chunk(v, nk, kv_chunk)
+    pq = pos_q.reshape(b, nq, q_chunk)
+    pk = pos_k.reshape(b, nk, kv_chunk)
+
+    def q_step(_, qi):
+        q_blk, pq_blk = qi
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk, v_blk, pk_blk = ki
+            mask = _mask_block(pq_blk, pk_blk, cfg)
+            m, l, acc = _block_update(q_blk, k_blk, v_blk, mask, m, l, acc,
+                                      scale)
+            return (m, l, acc), None
+
+        m0 = jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, kvh, g, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             pk.transpose(1, 0, 2)), unroll=unroll)
+        return None, _finalize(m, l, acc)
+
+    _, out = jax.lax.scan(
+        q_step, None,
+        (qc.transpose(1, 0, 2, 3, 4, 5), pq.transpose(1, 0, 2)),
+        unroll=unroll)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, kvh, g, hd)
+    return out
+
+
+def _mask_block(pq_blk, pk_blk, cfg: ModelConfig):
+    """[B,1,1,C,C2] mask from absolute positions (causal + window + valid)."""
+    dq = pq_blk[:, :, None]                            # [B,C,1]
+    dk = pk_blk[:, None, :]                            # [B,1,C2]
+    mask = dk >= 0                                     # -1 marks invalid slot
+    if cfg.causal:
+        mask &= dk <= dq
+    if cfg.sliding_window is not None:
+        mask &= dq - dk < cfg.sliding_window
+    return mask[:, None, None, :, :]
+
+
+# ---------------------------------------------------------------------------
+# schedule 2: triangular block list (hillclimbed full-causal path)
+# ---------------------------------------------------------------------------
+
+def _attend_triangular(q, k, v, pos_q, pos_k, cfg: ModelConfig, q_chunk,
+                       kv_chunk, unroll: bool = False):
+    assert q_chunk == kv_chunk, "triangular schedule uses square blocks"
+    b, s, kvh, g, hd = q.shape
+    c = q_chunk
+    n = s // c
+    scale = hd ** -0.5
+    qc = _chunk(q, n, c)
+    kc = _chunk(k, n, c)
+    vc = _chunk(v, n, c)
+    pq = pos_q.reshape(b, n, c)
+    pk = pos_k.reshape(b, n, c)
+
+    # Static block list: all (i, j) with j <= i, ordered j-major within i so
+    # each q row's blocks are consecutive -> single pass accumulators.
+    ii, jj = [], []
+    for i in range(n):
+        for j in range(i + 1):
+            ii.append(i)
+            jj.append(j)
+    ii = jnp.asarray(ii, jnp.int32)
+    jj = jnp.asarray(jj, jnp.int32)
+
+    m0 = jnp.full((b, n, kvh, g, c), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n, kvh, g, c), jnp.float32)
+    a0 = jnp.zeros((b, n, c, kvh, g, hd), jnp.float32)
+
+    def step(carry, idx):
+        m, l, acc = carry
+        i, j = idx
+        q_blk = jax.lax.dynamic_index_in_dim(qc, i, 1, keepdims=False)
+        k_blk = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+        v_blk = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+        pq_blk = jax.lax.dynamic_index_in_dim(pq, i, 1, keepdims=False)
+        pk_blk = jax.lax.dynamic_index_in_dim(pk, j, 1, keepdims=False)
+        mask = _mask_block(pq_blk, pk_blk, cfg)
+        mi = jax.lax.dynamic_index_in_dim(m, i, 1, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 1, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, 1, keepdims=False)
+        mi, li, ai = _block_update(q_blk, k_blk, v_blk, mask, mi, li, ai,
+                                   scale)
+        m = jax.lax.dynamic_update_index_in_dim(m, mi, i, 1)
+        l = jax.lax.dynamic_update_index_in_dim(l, li, i, 1)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, ai, i, 1)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ii, jj),
+                                  unroll=unroll)
+    out = jax.vmap(_finalize, in_axes=(1, 1, 1), out_axes=1)(m, l, acc)
+    return out.reshape(b, s, kvh, g, hd)
+
+
+# ---------------------------------------------------------------------------
+# schedule 3: banded (sliding window) -- O(S * W)
+# ---------------------------------------------------------------------------
+
+def _attend_banded(q, k, v, pos_q, pos_k, cfg: ModelConfig, chunk,
+                   unroll: bool = False):
+    b, s, kvh, g, hd = q.shape
+    c = chunk
+    n = s // c
+    w = cfg.sliding_window
+    nband = min(-(-w // c) + 1, n)          # bands 0..nband-1 behind
+    scale = hd ** -0.5
+    qc = _chunk(q, n, c)
+    kc = _chunk(k, n, c)
+    vc = _chunk(v, n, c)
+    pq = pos_q.reshape(b, n, c)
+    pk = pos_k.reshape(b, n, c)
+
+    m = jnp.full((b, n, kvh, g, c), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, n, kvh, g, c), jnp.float32)
+    acc = jnp.zeros((b, n, c, kvh, g, hd), jnp.float32)
+
+    def band_step(carry, off):
+        m, l, acc = carry
+        # q chunk i attends kv chunk i - off, vectorized over i via roll.
+        k_sh = jnp.roll(kc, off, axis=1)
+        v_sh = jnp.roll(vc, off, axis=1)
+        pk_sh = jnp.roll(pk, off, axis=1)
+        # wrapped chunks (i < off) get invalid positions -> fully masked
+        idx = jnp.arange(n)
+        valid_chunk = (idx >= off)[None, :, None]
+        pk_sh = jnp.where(valid_chunk, pk_sh, -1)
+        mask = _mask_block(pq.reshape(b * n, c), pk_sh.reshape(b * n, c), cfg)
+
+        # _block_update is fully batched; fold (b, n) into one batch axis.
+        mi, li, ai = _block_update(
+            qc.reshape(b * n, c, kvh, g, hd),
+            k_sh.reshape(b * n, c, kvh, hd),
+            v_sh.reshape(b * n, c, kvh, hd),
+            mask,
+            m.reshape(b * n, kvh, g, c),
+            l.reshape(b * n, kvh, g, c),
+            acc.reshape(b * n, c, kvh, g, hd),
+            scale)
+        return (mi.reshape(m.shape), li.reshape(l.shape),
+                ai.reshape(acc.shape)), None
+
+    (m, l, acc), _ = jax.lax.scan(band_step, (m, l, acc),
+                                  jnp.arange(nband, dtype=jnp.int32),
+                                  unroll=unroll)
+    out = jax.vmap(_finalize, in_axes=(1, 1, 1), out_axes=1)(m, l, acc)
+    return out.reshape(b, s, kvh, g, hd)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def attention_forward(params, x, positions, cfg: ModelConfig, *,
+                      impl: str = "auto", chunk: int = 512,
+                      mrope_positions=None, return_cache: bool = False,
+                      cache_len: Optional[int] = None,
+                      unroll: bool = False):
+    """Full-sequence attention (train / prefill).
+
+    Returns (y, cache|None); cache k/v cover the last ``cache_len`` positions
+    (default: the whole sequence, or the window for local attention).
+    """
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = h // kvh
+    q, k, v = _project_qkv(params, x, positions, cfg, mrope_positions)
+    qg = q.reshape(b, s, kvh, g, hd)
+
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+    if impl == "auto":
+        if cfg.sliding_window is not None and cfg.sliding_window < s:
+            impl = "banded"
+        else:
+            impl = "masked"
+    if unroll and impl in ("masked", "triangular"):
+        # Analysis lowering: unrolled scans must stay O(64) bodies.  These
+        # schedules' FLOPs are chunk-size independent, so enlarging the
+        # block for analysis changes nothing the roofline reads.
+        c = max(c, s // 8)
+    if impl == "banded":
+        out = _attend_banded(qg, k, v, positions, positions, cfg, c,
+                             unroll=unroll)
+    elif impl == "triangular" and cfg.causal:
+        out = _attend_triangular(qg, k, v, positions, positions, cfg, c, c,
+                                 unroll=unroll)
+    else:
+        out = _attend_masked(qg, k, v, positions, positions, cfg, c, c,
+                             unroll=unroll)
+
+    out = out.reshape(b, s, h * hd).astype(x.dtype)
+    y = out @ params["wo"]
+
+    cache = None
+    if return_cache:
+        if cache_len is None:
+            cache_len = (min(cfg.sliding_window, s)
+                         if cfg.sliding_window is not None else s)
+        kc, vc = k[:, -cache_len:], v[:, -cache_len:]
+        pc = positions[:, -cache_len:]
+        if cache_len > kc.shape[1]:
+            pad = cache_len - kc.shape[1]
+            kc = jnp.pad(kc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(vc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            pc = jnp.pad(pc, ((0, 0), (0, pad)), constant_values=-1)
+        if (cfg.sliding_window is not None
+                and cache_len == cfg.sliding_window and s >= cache_len):
+            # Ring-buffer invariant: position p lives in slot p % window.
+            shift = s % cache_len
+            kc = jnp.roll(kc, shift, axis=1)
+            vc = jnp.roll(vc, shift, axis=1)
+            pc = jnp.roll(pc, shift, axis=1)
+        cache = {"k": kc, "v": vc, "pos": pc}
+    return y, cache
+
+
+def attention_decode(params, x_t, cache, position, cfg: ModelConfig, *,
+                     mrope_positions=None):
+    """One decode step.  x_t [B, 1, D]; cache from ``attention_forward`` or
+    ``init_cache``.  Local attention uses the ring-buffer slot pos % window.
+    """
+    b = x_t.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = h // kvh
+    pos = jnp.broadcast_to(position, (b, 1)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x_t, pos, cfg, mrope_positions)
+
+    s_max = cache["k"].shape[1]
+    if cfg.sliding_window is not None and cfg.sliding_window <= s_max:
+        slot = position % cfg.sliding_window
+    else:
+        slot = position
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    pos_buf = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.broadcast_to(position, (b, 1)).astype(jnp.int32),
+        (0, slot))
+
+    qg = q.reshape(b, 1, kvh, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg,
+                        k.astype(jnp.float32)) * hd ** -0.5
+    dq = pos[:, None, None, :, None]                   # [B,1,1,1,1]
+    dk = pos_buf[:, None, None, None, :]               # [B,1,1,1,S]
+    mask = (dk >= 0) & (dk <= dq)
+    if cfg.sliding_window is not None:
+        mask &= dq - dk < cfg.sliding_window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x_t.dtype)
+    y = out @ params["wo"]
+    return y, {"k": k, "v": v, "pos": pos_buf}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    if cfg.sliding_window is not None:
+        max_len = min(max_len, cfg.sliding_window)
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kvh, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kvh, hd), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }

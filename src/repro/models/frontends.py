@@ -1,0 +1,78 @@
+"""Modality frontends (STUBS per the assignment).
+
+The [vlm] and [audio] archs specify the transformer backbone only; the
+modality encoder is replaced by ``input_specs()``-provided *precomputed*
+embeddings:
+
+  patch  (qwen2-vl):  batch["patches"] [B, n_patch, frontend_dim] are
+         precomputed vision-patch embeddings, linearly projected and
+         prepended to the text-token embeddings; M-RoPE gets a (t, h, w)
+         position triple per slot (grid positions for patches, running t
+         for text).
+  frame  (hubert):    batch["frames"] [B, S, frontend_dim] are precomputed
+         acoustic frame features, linearly projected; encoder-only, no
+         token embedding at all.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import truncated_normal_init
+
+
+def init_frontend(key, cfg: ModelConfig) -> dict:
+    if cfg.frontend == "none":
+        return {}
+    return {"proj": truncated_normal_init(
+        key, (cfg.frontend_dim, cfg.d_model), 1.0,
+        jnp.dtype(cfg.param_dtype))}
+
+
+def patch_grid_mrope(n_patch: int, text_len: int, batch: int) -> jax.Array:
+    """Stub M-RoPE position triples: patches on an hxw grid at t=0, text at
+    running t after the grid.  [B, n_patch + text_len, 3] int32."""
+    side = max(int(n_patch ** 0.5), 1)
+    idx = jnp.arange(n_patch)
+    patch_pos = jnp.stack([jnp.zeros_like(idx), idx // side, idx % side], -1)
+    t0 = 1 + (n_patch - 1) // side
+    tpos = t0 + jnp.arange(text_len)
+    text_pos = jnp.stack([tpos, tpos, tpos], -1)
+    pos = jnp.concatenate([patch_pos, text_pos], 0).astype(jnp.int32)
+    return jnp.broadcast_to(pos[None], (batch, n_patch + text_len, 3))
+
+
+def text_mrope_t0(n_patch: int) -> int:
+    """First text `t` coordinate after an n_patch grid (matches
+    ``patch_grid_mrope``)."""
+    side = max(int(n_patch ** 0.5), 1)
+    return 1 + (n_patch - 1) // side
+
+
+def embed_inputs(params: dict, batch: dict, cfg: ModelConfig,
+                 embed_table) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+    """-> (x [B, S, D], positions [B, S], mrope_positions|None)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.frontend == "frame":
+        x = batch["frames"].astype(dt) @ params["frontend"]["proj"]
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return x, pos, None
+
+    tokens = batch["tokens"]
+    tok_x = embed_table[tokens].astype(dt)
+    if cfg.frontend == "patch":
+        px = batch["patches"].astype(dt) @ params["frontend"]["proj"]
+        x = jnp.concatenate([px, tok_x], axis=1)
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        mrope = batch.get("mrope_positions")
+        if mrope is None and cfg.rope == "mrope":
+            mrope = patch_grid_mrope(px.shape[1], tok_x.shape[1], b)
+        return x, pos, mrope
+
+    b, s, _ = tok_x.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return tok_x, pos, None

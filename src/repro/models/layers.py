@@ -1,0 +1,134 @@
+"""Shared primitives: RMSNorm, rotary variants (RoPE / 2-D partial RoPE /
+M-RoPE), causal depthwise conv, initializers.
+
+All functions are pure; parameters are plain dict pytrees so the whole model
+remains a transparent JAX program (pjit/GSPMD sees every array).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = scale / max(fan_in, 1) ** 0.5
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32
+                                             ).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (three variants from the assigned archs)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def _apply_rotary(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """Rotate pairs (x0,x1) -> (x0 cos - x1 sin, x1 cos + x0 sin).
+
+    x: [..., rot_dim] with rot_dim even; sin/cos broadcastable [..., rot_dim/2].
+    """
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def apply_rope(q: jax.Array, k: jax.Array, positions: jax.Array,
+               head_dim: int, theta: float = 10_000.0,
+               variant: str = "rope",
+               mrope_positions: Optional[jax.Array] = None):
+    """Apply a rotary variant to q [..., S, H, hd] and k [..., S, KV, hd].
+
+    positions: [B, S] int32 absolute positions.
+    variant:
+      "rope"   - standard full-dim rotary.
+      "rope2d" - ChatGLM-style: rotary on the first half of head_dim only.
+      "mrope"  - Qwen2-VL multimodal rotary: head_dim split into 3 sections
+                 (t, h, w) each rotated by its own position stream
+                 (``mrope_positions`` [B, S, 3]; text degenerates to t=h=w).
+      "none"   - identity.
+    """
+    if variant == "none":
+        return q, k
+
+    def rot(x, pos, dim, th):
+        # x [B, S, N, dim]; pos [B, S]
+        freqs = _rope_freqs(dim, th)                     # [dim/2]
+        ang = pos.astype(jnp.float32)[..., None] * freqs  # [B, S, dim/2]
+        sin = jnp.sin(ang)[:, :, None, :]
+        cos = jnp.cos(ang)[:, :, None, :]
+        return _apply_rotary(x.astype(jnp.float32), sin, cos).astype(x.dtype)
+
+    if variant == "rope":
+        return (rot(q, positions, head_dim, theta),
+                rot(k, positions, head_dim, theta))
+
+    if variant == "rope2d":
+        half = head_dim // 2
+        q_rot, q_pass = q[..., :half], q[..., half:]
+        k_rot, k_pass = k[..., :half], k[..., half:]
+        q_rot = rot(q_rot, positions, half, theta)
+        k_rot = rot(k_rot, positions, half, theta)
+        return (jnp.concatenate([q_rot, q_pass], -1),
+                jnp.concatenate([k_rot, k_pass], -1))
+
+    if variant == "mrope":
+        if mrope_positions is None:
+            mrope_positions = jnp.repeat(positions[..., None], 3, axis=-1)
+        # 3 sections: [t, h, w] with dims summing to head_dim (t gets the
+        # remainder so hd=128 -> 64/32/32, matching Qwen2-VL's 2:1:1 split).
+        dh = head_dim // 4
+        dims = (head_dim - 2 * dh, dh, dh)
+        outs_q, outs_k = [], []
+        off = 0
+        for i, dim in enumerate(dims):
+            pos_i = mrope_positions[..., i]
+            outs_q.append(rot(q[..., off:off + dim], pos_i, dim, theta))
+            outs_k.append(rot(k[..., off:off + dim], pos_i, dim, theta))
+            off += dim
+        return jnp.concatenate(outs_q, -1), jnp.concatenate(outs_k, -1)
+
+    raise ValueError(f"unknown rope variant {variant!r}")
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise 1-D convolution (Mamba2 / RG-LRU front convs)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x [B, S, C], w [K, C] depthwise taps; causal (pads K-1 on the left)."""
+    k = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):                       # K is 4: unrolled taps
+        out = out + pads[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out
+
+
+def causal_conv1d_update(x_t: jax.Array, conv_state: jax.Array,
+                         w: jax.Array):
+    """Single-step conv for decode.  x_t [B, C]; conv_state [B, K-1, C]."""
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [B,K,C]
+    y = jnp.sum(window * w[None, :, :], axis=1)
+    return y, window[:, 1:, :]

@@ -1,0 +1,404 @@
+"""The LM backbone: init / forward / prefill / decode for every family.
+
+Structure per layer (pre-norm residual):
+
+  attn / rec:  x += mixer(rms(x));  x += ffn(rms(x))
+  ssm:         x += mixer(rms(x))                 (Mamba-style, no FFN)
+
+Homogeneous stacks (dense / moe / ssm / vlm / audio) are scanned with
+``jax.lax.scan`` over layer-stacked parameters, keeping HLO size O(1) in
+depth -- essential for compiling 61-80 layer models against 512 virtual
+devices.  The hybrid arch (recurrentgemma's [rec, rec, attn] pattern) uses a
+Python loop over per-layer parameter dicts (26 layers, small HLO).
+
+Activation sharding is injected via the ``constrain`` hook
+(``distributed.sharding.make_constrainer``); the default is identity so the
+model runs unmodified on one device.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import frontends, moe as moe_mod, rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import embed_init, rms_norm, truncated_normal_init
+from repro.models.mlp import init_mlp, mlp_forward
+
+Constrain = Callable[..., jax.Array]
+_ID: Constrain = lambda x, *names: x
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, layer_type: str) -> dict:
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: dict = {"ln1": jnp.zeros((cfg.d_model,), dt)}
+    if layer_type == "attn":
+        p["mixer"] = attn_mod.init_attention(ks[0], cfg)
+    elif layer_type == "rec":
+        p["mixer"] = rglru_mod.init_rglru(ks[0], cfg)
+    elif layer_type == "ssm":
+        p["mixer"] = ssm_mod.init_ssm(ks[0], cfg)
+    else:
+        raise ValueError(layer_type)
+    if layer_type != "ssm":
+        p["ln2"] = jnp.zeros((cfg.d_model,), dt)
+        if cfg.moe is not None:
+            p["ffn"] = moe_mod.init_moe(ks[1], cfg.d_model, cfg.moe, dt)
+        elif cfg.d_ff:
+            p["ffn"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4 + cfg.num_layers)
+    dt = jnp.dtype(cfg.param_dtype)
+    params: dict = {}
+    if cfg.vocab_size:
+        params["embed"] = embed_init(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                     dt)
+    if cfg.frontend != "none":
+        params["frontend"] = frontends.init_frontend(ks[1], cfg)
+    pattern = cfg.layer_pattern
+    if cfg.scan_layers and len(set(pattern)) == 1:
+        layer_keys = jnp.stack(ks[4:4 + cfg.num_layers])
+        params["layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, pattern[0]))(layer_keys)
+    elif cfg.use_period_scan:
+        # hybrid pattern: scan over periods; params stacked per position
+        period, n_per, tail = cfg.period_info
+        plen = len(period)
+        stacks = []
+        for j, t in enumerate(period):
+            pos_keys = jnp.stack([ks[4 + i * plen + j] for i in
+                                  range(n_per)])
+            stacks.append(jax.vmap(
+                lambda k, t=t: _init_layer(k, cfg, t))(pos_keys))
+        tail_params = [
+            _init_layer(ks[4 + n_per * plen + i], cfg, t)
+            for i, t in enumerate(tail)]
+        params["layers"] = {"period": tuple(stacks), "tail": tail_params}
+    else:
+        params["layers"] = [
+            _init_layer(ks[4 + i], cfg, t) for i, t in enumerate(pattern)]
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+    if cfg.vocab_size and not cfg.tie_embeddings:
+        params["head"] = truncated_normal_init(
+            ks[2], (cfg.d_model, cfg.padded_vocab), 1.0, dt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# one block
+# ---------------------------------------------------------------------------
+
+def _apply_block(layer_params, x, positions, cfg: ModelConfig,
+                 layer_type: str, *, mode: str, cache=None,
+                 mrope_positions=None, attn_impl: str = "auto",
+                 chunk: int = 512, constrain: Constrain = _ID,
+                 decode_pos=None, cache_len=None, attn_unroll: bool = False):
+    """Returns (x, new_cache, aux)."""
+    aux = {}
+    h = rms_norm(x, layer_params["ln1"], cfg.norm_eps)
+    new_cache = None
+    if layer_type == "attn":
+        if mode == "decode":
+            y, new_cache = attn_mod.attention_decode(
+                layer_params["mixer"], h, cache, decode_pos, cfg,
+                mrope_positions=mrope_positions)
+        else:
+            y, new_cache = attn_mod.attention_forward(
+                layer_params["mixer"], h, positions, cfg, impl=attn_impl,
+                chunk=chunk, mrope_positions=mrope_positions,
+                return_cache=(mode == "prefill"), cache_len=cache_len,
+                unroll=attn_unroll)
+    elif layer_type == "rec":
+        if mode == "decode":
+            y, new_cache = rglru_mod.rglru_decode(
+                layer_params["mixer"], h, cache, cfg)
+        else:
+            y, new_cache = rglru_mod.rglru_forward(
+                layer_params["mixer"], h, cfg,
+                return_state=(mode == "prefill"))
+    elif layer_type == "ssm":
+        if mode == "decode":
+            y, new_cache = ssm_mod.ssm_decode(
+                layer_params["mixer"], h, cache, cfg)
+        else:
+            y, new_cache = ssm_mod.ssm_forward(
+                layer_params["mixer"], h, cfg,
+                return_state=(mode == "prefill"))
+    else:
+        raise ValueError(layer_type)
+    x = x + y
+    x = constrain(x, "batch", "seq", "embed")
+
+    if layer_type != "ssm" and "ffn" in layer_params:
+        h = rms_norm(x, layer_params["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            # EP fast path: explicit shard_map all-to-all dispatch when a
+            # mesh is attached to the constrain hook and experts divide the
+            # model axis (see distributed/moe_ep.py).  GSPMD fallback
+            # otherwise (and as the recorded section-Perf baseline).
+            mesh = getattr(constrain, "mesh", None)
+            use_ep = getattr(constrain, "moe_impl", "ep") == "ep"
+            from repro.distributed import moe_ep
+
+            if use_ep and moe_ep.applicable(cfg.moe, mesh):
+                y, aux = moe_ep.moe_forward_ep(
+                    layer_params["ffn"], h, cfg.moe, mesh,
+                    serving=getattr(constrain, "serving", False))
+            else:
+                y, aux = moe_mod.moe_forward(layer_params["ffn"], h, cfg.moe,
+                                             constrain)
+        else:
+            y = mlp_forward(layer_params["ffn"], h)
+        x = x + y
+        x = constrain(x, "batch", "seq", "embed")
+    return x, new_cache, aux
+
+
+def _zero_aux(cfg: ModelConfig) -> dict:
+    if cfg.moe is None:
+        return {}
+    return {"load_balance_loss": jnp.float32(0.0),
+            "router_z_loss": jnp.float32(0.0),
+            "drop_fraction": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, batch: dict, cfg: ModelConfig, *,
+            mode: str = "train", attn_impl: str = "auto", chunk: int = 512,
+            constrain: Constrain = _ID, cache_len: Optional[int] = None,
+            attn_unroll: bool = False, scan_unroll: bool = False):
+    """-> (logits [B, S, V_pad] f32, caches|None, aux dict).
+
+    ``cache_len``: KV-cache capacity when mode == 'prefill' (defaults to the
+    prefill length; pass the decode horizon to pre-allocate room)."""
+    assert mode in ("train", "prefill")
+    embed = params.get("embed")
+    x, positions, mrope = frontends.embed_inputs(params, batch, cfg, embed)
+    x = constrain(x, "batch", "seq", "embed")
+    pattern = cfg.layer_pattern
+    aux_total = _zero_aux(cfg)
+
+    block = functools.partial(
+        _apply_block, cfg=cfg, mode=mode, attn_impl=attn_impl, chunk=chunk,
+        constrain=constrain, mrope_positions=mrope, cache_len=cache_len,
+        attn_unroll=attn_unroll)
+
+    scanned = cfg.scan_layers and len(set(pattern)) == 1
+    caches = None
+    if scanned:
+        layer_type = pattern[0]
+
+        def body(carry, layer_params):
+            x, aux_c = carry
+            x, new_cache, aux = block(layer_params, x, positions,
+                                      layer_type=layer_type)
+            for k in aux_c:
+                aux_c[k] = aux_c[k] + aux.get(k, 0.0)
+            return (x, aux_c), new_cache
+
+        if cfg.remat != "none" and mode == "train":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat == "dots" else None)
+            body = jax.checkpoint(body, policy=policy,
+                                  prevent_cse=False)
+        (x, aux_total), caches = jax.lax.scan(body, (x, aux_total),
+                                              params["layers"],
+                                              unroll=scan_unroll)
+        if mode != "prefill":
+            caches = None
+    elif cfg.use_period_scan:
+        period, n_per, tail = cfg.period_info
+
+        def period_body(carry, per_params):
+            x, aux_c = carry
+            new_caches = []
+            for j, t in enumerate(period):
+                x, nc, aux = block(per_params[j], x, positions,
+                                   layer_type=t)
+                new_caches.append(nc)
+                for k in aux_c:
+                    aux_c[k] = aux_c[k] + aux.get(k, 0.0)
+            return (x, aux_c), tuple(new_caches)
+
+        if cfg.remat != "none" and mode == "train":
+            period_body = jax.checkpoint(period_body, prevent_cse=False)
+        (x, aux_total), per_caches = jax.lax.scan(
+            period_body, (x, aux_total), params["layers"]["period"],
+            unroll=scan_unroll)
+        tail_caches = []
+        for i, t in enumerate(tail):
+            x, nc, aux = block(params["layers"]["tail"][i], x, positions,
+                               layer_type=t)
+            tail_caches.append(nc)
+            for k in aux_total:
+                aux_total[k] = aux_total[k] + aux.get(k, 0.0)
+        caches = ({"period": per_caches, "tail": tail_caches}
+                  if mode == "prefill" else None)
+    else:
+        caches = []
+        for i, layer_type in enumerate(pattern):
+            lp = params["layers"][i]
+            fn = block
+            if cfg.remat != "none" and mode == "train":
+                fn = jax.checkpoint(
+                    functools.partial(block, layer_type=layer_type),
+                    prevent_cse=False)
+                x, new_cache, aux = fn(lp, x, positions)
+            else:
+                x, new_cache, aux = fn(lp, x, positions,
+                                       layer_type=layer_type)
+            caches.append(new_cache)
+            for k in aux_total:
+                aux_total[k] = aux_total[k] + aux.get(k, 0.0)
+        if mode != "prefill":
+            caches = None
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head(params, x, cfg)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, caches, aux_total
+
+
+def _head(params, x, cfg: ModelConfig):
+    if not cfg.vocab_size:
+        return x.astype(jnp.float32)
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["head"]
+    return (x @ w).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode caches for every layer (stacked for scanned stacks)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    pattern = cfg.layer_pattern
+
+    def one(layer_type):
+        if layer_type == "attn":
+            return attn_mod.init_cache(cfg, batch, max_len, dt)
+        if layer_type == "ssm":
+            return ssm_mod.init_ssm_cache(cfg, batch, dt)
+        return rglru_mod.init_rglru_cache(cfg, batch, dt)
+
+    if cfg.scan_layers and len(set(pattern)) == 1:
+        caches = one(pattern[0])
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape),
+            caches)
+    if cfg.use_period_scan:
+        period, n_per, tail = cfg.period_info
+        per = tuple(
+            jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_per,) + a.shape),
+                one(t))
+            for t in period)
+        return {"period": per, "tail": [one(t) for t in tail]}
+    return [one(t) for t in pattern]
+
+
+def decode_step(params: dict, tokens_t: jax.Array, caches, position,
+                cfg: ModelConfig, *, constrain: Constrain = _ID,
+                embeds_t: Optional[jax.Array] = None,
+                scan_unroll: bool = False):
+    """One new token for every sequence.
+
+    tokens_t [B, 1] int32 (or ``embeds_t`` [B, 1, D] for frame frontends).
+    position: scalar int32 -- current absolute position.
+    -> (logits [B, 1, V_pad] f32, new caches)
+    """
+    if embeds_t is not None:
+        x = embeds_t.astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        x = params["embed"][tokens_t].astype(jnp.dtype(cfg.compute_dtype))
+    x = constrain(x, "batch", None, "embed")
+    b = x.shape[0]
+    pos_arr = jnp.broadcast_to(position, (b, 1)).astype(jnp.int32)
+    if cfg.rope == "mrope":
+        # Text `t` coordinate continues from the patch grid's end (must
+        # match frontends.patch_grid_mrope used at prefill time).
+        if cfg.frontend == "patch" and cfg.frontend_tokens:
+            t0 = frontends.text_mrope_t0(cfg.frontend_tokens)
+            t_coord = t0 + (pos_arr - cfg.frontend_tokens)
+        else:
+            t_coord = pos_arr
+        mrope = jnp.repeat(t_coord[..., None], 3, axis=-1)
+    else:
+        mrope = None
+
+    pattern = cfg.layer_pattern
+    block = functools.partial(
+        _apply_block, cfg=cfg, mode="decode", constrain=constrain,
+        mrope_positions=mrope, decode_pos=position)
+
+    scanned = cfg.scan_layers and len(set(pattern)) == 1
+    if scanned:
+        layer_type = pattern[0]
+
+        def body(x, inp):
+            layer_params, cache = inp
+            x, new_cache, _ = block(layer_params, x, pos_arr, cache=cache,
+                                    layer_type=layer_type)
+            return x, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches),
+                                     unroll=scan_unroll)
+    elif cfg.use_period_scan:
+        period, n_per, tail = cfg.period_info
+
+        def period_body(x, inp):
+            per_params, per_caches = inp
+            new_caches = []
+            for j, t in enumerate(period):
+                x, nc, _ = block(per_params[j], x, pos_arr,
+                                 cache=per_caches[j], layer_type=t)
+                new_caches.append(nc)
+            return x, tuple(new_caches)
+
+        x, per_new = jax.lax.scan(
+            period_body, x,
+            (params["layers"]["period"], caches["period"]),
+            unroll=scan_unroll)
+        tail_new = []
+        for i, t in enumerate(tail):
+            x, nc, _ = block(params["layers"]["tail"][i], x, pos_arr,
+                             cache=caches["tail"][i], layer_type=t)
+            tail_new.append(nc)
+        new_caches = {"period": per_new, "tail": tail_new}
+    else:
+        new_caches = []
+        for i, layer_type in enumerate(pattern):
+            x, nc, _ = block(params["layers"][i], x, pos_arr,
+                             cache=caches[i], layer_type=layer_type)
+            new_caches.append(nc)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _head(params, x, cfg)
+    return logits, new_caches

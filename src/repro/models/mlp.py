@@ -1,0 +1,24 @@
+"""Gated-linear-unit FFN (SwiGLU family) -- the dense archs' MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import truncated_normal_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": truncated_normal_init(k1, (d_model, d_ff), 1.0, dtype),
+        "w_up": truncated_normal_init(k2, (d_model, d_ff), 1.0, dtype),
+        "w_down": truncated_normal_init(k3, (d_ff, d_model), 1.0, dtype),
+    }
+
+
+def mlp_forward(params: dict, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    up = x @ params["w_up"]
+    return (gate * up) @ params["w_down"]

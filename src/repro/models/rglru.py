@@ -1,0 +1,113 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    r_t = sigmoid(w_a * u_t + b_a)            (recurrence gate, per-channel)
+    i_t = sigmoid(w_x * u_t + b_x)            (input gate, per-channel)
+    log a_t = -c * softplus(lambda) * r_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The block wraps the LRU with the Griffin recurrent-block plumbing: two input
+branches (x branch -> causal conv -> LRU; gate branch -> GeLU), merged
+multiplicatively, then an output projection.
+
+Prefill/train uses ``jax.lax.associative_scan`` over the sequence (the
+recurrence h_t = a_t h_{t-1} + b_t is associative under
+(a2, b2) o (a1, b1) = (a1*a2, a2*b1 + b2)), giving O(S log S) work with full
+parallelism; decode is the O(1) single-step update.  Gates are per-channel
+(diagonal) rather than full matrices -- recorded in DESIGN.md as a
+simplification that preserves the O(1)-state property the long_500k shape
+exercises.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (causal_conv1d, causal_conv1d_update,
+                                 truncated_normal_init)
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = _width(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_x_branch": truncated_normal_init(ks[0], (d, w), 1.0, dt),
+        "w_gate_branch": truncated_normal_init(ks[1], (d, w), 1.0, dt),
+        "conv_w": truncated_normal_init(ks[2], (cfg.rglru.conv_width, w),
+                                        1.0, dt),
+        # LRU gate parameters (diagonal)
+        "w_a": jnp.zeros((w,), jnp.float32),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": jnp.zeros((w,), jnp.float32),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # lambda init so softplus(lambda) ~ U[0.9, 1.1] scaled decays
+        "lam": jnp.linspace(0.5, 2.0, w).astype(jnp.float32),
+        "w_out": truncated_normal_init(ks[3], (w, d), 1.0, dt),
+    }
+
+
+def _lru_coeffs(params, u, c_exp: float):
+    """u [..., W] -> (log_a, b) of the linear recurrence."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(params["w_a"] * uf + params["b_a"])
+    i = jax.nn.sigmoid(params["w_i"] * uf + params["b_i"])
+    log_a = -c_exp * jax.nn.softplus(params["lam"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * uf)
+    return log_a, b
+
+
+def rglru_forward(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                  return_state: bool = False):
+    """x [B, S, D] -> y [B, S, D] (+ optional decode cache)."""
+    cw = cfg.rglru.conv_width
+    u = x @ params["w_x_branch"]                       # [B, S, W]
+    gate = jax.nn.gelu(x @ params["w_gate_branch"])
+    u_conv = causal_conv1d(u, params["conv_w"])
+
+    log_a, b = _lru_coeffs(params, u_conv, cfg.rglru.c_exponent)
+    a = jnp.exp(log_a)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype) * gate) @ params["w_out"]
+
+    if not return_state:
+        return y, None
+    conv_tail = u[:, -(cw - 1):, :]
+    pad = cw - 1 - conv_tail.shape[1]
+    if pad > 0:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+    return y, {"h": h[:, -1, :], "conv": conv_tail}
+
+
+def rglru_decode(params: dict, x_t: jax.Array, cache: dict,
+                 cfg: ModelConfig):
+    """x_t [B, 1, D]; cache {h [B, W] f32, conv [B, K-1, W]}."""
+    u = (x_t[:, 0, :] @ params["w_x_branch"])
+    gate = jax.nn.gelu(x_t[:, 0, :] @ params["w_gate_branch"])
+    u_conv, conv_state = causal_conv1d_update(u, cache["conv"],
+                                              params["conv_w"])
+    log_a, b = _lru_coeffs(params, u_conv, cfg.rglru.c_exponent)
+    h = jnp.exp(log_a) * cache["h"] + b
+    y = ((h.astype(x_t.dtype) * gate) @ params["w_out"])[:, None, :]
+    return y, {"h": h, "conv": conv_state}
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = _width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w), dtype),
+    }

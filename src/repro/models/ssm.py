@@ -1,0 +1,176 @@
+"""Mamba-2 mixer via the SSD (state-space duality) chunked algorithm.
+
+Per head h with state size N and head dim P, the SSM recurrence is
+
+    h_t = a_t * h_{t-1} + dt_t * (x_t outer B_t)        h in R^{P x N}
+    y_t = h_t C_t + D * x_t
+
+with a_t = exp(dt_t * A) in (0, 1) (A = -exp(A_log) < 0).  SSD splits the
+sequence into chunks of Q tokens: the *intra*-chunk part is a small masked
+"attention" G[t, s] = (C_t . B_s) * exp(cumlog_a_t - cumlog_a_s) executed as
+dense Q x Q matmuls (MXU-friendly), and the *inter*-chunk part carries the
+[P, N] state through a lax.scan over chunks.  Total FLOPs O(S * Q * (N + P))
+-- sub-quadratic in S, which is what qualifies mamba2 for the long_500k
+shape.
+
+B and C are shared across heads (n_groups = 1, as in the 2.7b config).
+Decode is the O(1) recurrence on the carried state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, SSMConfig
+from repro.models.layers import (causal_conv1d, causal_conv1d_update,
+                                 rms_norm, truncated_normal_init)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return s, d_inner, n_heads
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    s, d_inner, n_heads = _dims(cfg)
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    conv_ch = d_inner + 2 * s.state_dim
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": truncated_normal_init(
+            ks[0], (d, 2 * d_inner + 2 * s.state_dim + n_heads), 1.0, dt),
+        "conv_w": truncated_normal_init(ks[1], (s.conv_width, conv_ch), 1.0,
+                                        dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dt),
+        "w_out": truncated_normal_init(ks[2], (d_inner, d), 1.0, dt),
+    }
+
+
+def _split_proj(params, u, cfg: ModelConfig):
+    s, d_inner, n_heads = _dims(cfg)
+    proj = u @ params["w_in"]
+    z, x, bc, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + 2 * s.state_dim], axis=-1)
+    return z, x, bc, dt_raw
+
+
+def ssm_forward(params: dict, u: jax.Array, cfg: ModelConfig, *,
+                return_state: bool = False):
+    """u [B, S, D] -> y [B, S, D] (+ optional final decode cache)."""
+    s_cfg, d_inner, n_heads = _dims(cfg)
+    b, seq, _ = u.shape
+    p_dim, n_dim = s_cfg.head_dim, s_cfg.state_dim
+    q = min(s_cfg.chunk, seq)
+    while seq % q:
+        q //= 2
+    nc = seq // q
+
+    z, x, bc, dt_raw = _split_proj(params, u, cfg)
+    conv_in = jnp.concatenate([x, bc], axis=-1)
+    conv_out = jax.nn.silu(causal_conv1d(conv_in, params["conv_w"]))
+    x, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])                       # [H] negative
+    log_a = dt * a[None, None, :]                       # [B, S, H]  (log decay)
+
+    xh = x.reshape(b, nc, q, n_heads, p_dim).astype(jnp.float32)
+    bm = bmat.reshape(b, nc, q, n_dim).astype(jnp.float32)
+    cm = cmat.reshape(b, nc, q, n_dim).astype(jnp.float32)
+    la = log_a.reshape(b, nc, q, n_heads)
+    dtc = dt.reshape(b, nc, q, n_heads)
+
+    # cumulative log-decay within each chunk (inclusive)
+    cla = jnp.cumsum(la, axis=2)                        # [B,nc,Q,H]
+
+    # ---- intra-chunk: masked QxQ "attention" per head ----
+    cb = jnp.einsum("bcqn,bcsn->bcqs", cm, bm)          # [B,nc,Q,Q]
+    tri = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    log_decay = cla[:, :, :, None, :] - cla[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    # mask BEFORE exp: the upper triangle has positive exponents (overflow)
+    decay = jnp.exp(jnp.where(tri, log_decay, -jnp.inf))
+    g = cb[..., None] * decay
+    dtx = xh * dtc[..., None]                           # [B,nc,Q,H,P]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", g, dtx)
+
+    # ---- inter-chunk: scan the [H, P, N] state across chunks ----
+    # state contribution of chunk: sum_s exp(cla_Q - cla_s) dt_s x_s B_s^T
+    chunk_decay = jnp.exp(cla[:, :, -1:, :] - cla)      # [B,nc,Q,H]
+    state_in = jnp.einsum("bcqhp,bcqn,bcqh->bchpn", xh * dtc[..., None], bm,
+                          chunk_decay)
+    total_decay = jnp.exp(cla[:, :, -1, :])             # [B,nc,H]
+
+    def chunk_step(h, inp):
+        st_in, tdec = inp                               # [B,H,P,N], [B,H]
+        h_out = h                                       # state BEFORE chunk
+        h = h * tdec[..., None, None] + st_in
+        return h, h_out
+
+    h0 = jnp.zeros((b, n_heads, p_dim, n_dim), jnp.float32)
+    h_final, h_before = jax.lax.scan(
+        chunk_step, h0,
+        (state_in.transpose(1, 0, 2, 3, 4), total_decay.transpose(1, 0, 2)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)        # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cm, h_before,
+                         jnp.exp(cla))
+    y = (y_intra + y_inter).reshape(b, seq, d_inner)
+    y = y + (x.astype(jnp.float32)
+             * jnp.repeat(params["d_skip"], p_dim)[None, None, :])
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(u.dtype), params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+
+    if not return_state:
+        return out, None
+    conv_tail = conv_in[:, -(s_cfg.conv_width - 1):, :]
+    pad = s_cfg.conv_width - 1 - conv_tail.shape[1]
+    if pad > 0:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"h": h_final, "conv": conv_tail}
+
+
+def ssm_decode(params: dict, u_t: jax.Array, cache: dict, cfg: ModelConfig):
+    """One token: u_t [B, 1, D]; cache {h [B,H,P,N], conv [B,K-1,C]}."""
+    s_cfg, d_inner, n_heads = _dims(cfg)
+    b = u_t.shape[0]
+    p_dim, n_dim = s_cfg.head_dim, s_cfg.state_dim
+
+    z, x, bc, dt_raw = _split_proj(params, u_t[:, 0, :], cfg)
+    conv_in = jnp.concatenate([x, bc], axis=-1)
+    conv_out, conv_state = causal_conv1d_update(conv_in, cache["conv"],
+                                                params["conv_w"])
+    conv_out = jax.nn.silu(conv_out)
+    x, bm, cm = jnp.split(conv_out, [d_inner, d_inner + n_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a[None, :])                    # [B, H]
+
+    xh = x.reshape(b, n_heads, p_dim).astype(jnp.float32)
+    dbx = jnp.einsum("bhp,bn,bh->bhpn", xh, bm.astype(jnp.float32), dt)
+    h = cache["h"] * decay[..., None, None] + dbx
+    y = jnp.einsum("bn,bhpn->bhp", cm.astype(jnp.float32), h)
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(b, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(u_t.dtype), params["norm"], cfg.norm_eps)
+    out = (y @ params["w_out"])[:, None, :]
+    return out, {"h": h, "conv": conv_state}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s_cfg, d_inner, n_heads = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, n_heads, s_cfg.head_dim, s_cfg.state_dim),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, s_cfg.conv_width - 1,
+                           d_inner + 2 * s_cfg.state_dim), dtype),
+    }

@@ -1,0 +1,151 @@
+"""Continuous batching for the serving path.
+
+A fixed pool of B slots; requests join free slots, are prefilled into their
+slot's region of the batched KV cache, all active slots decode as one
+``decode_step`` call, and requests leave on EOS / max-new-tokens.  Per-slot
+bookkeeping (positions, last token) lives host-side; the device state is the
+batched cache, pre-allocated at [B, max_len] so slot churn never reallocates
+device memory.  This is the vLLM-style production decode-server shape,
+minus paged attention (slots own contiguous cache regions).
+
+Cache layout note: scanned stacks store caches as [L, B, ...] (batch dim 1),
+hybrid python-loop models as lists of [B, ...] (batch dim 0); the merge
+helper is told which.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serve.decode import sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # [S0] int32
+    max_new_tokens: int
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Synchronous continuous-batching engine over ``decode_step``."""
+
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int,
+                 max_len: int, eos_id: Optional[int] = None,
+                 temperature: float = 0.0, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.b = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.caches = lm.init_caches(cfg, batch_slots, max_len)
+        pattern = cfg.layer_pattern
+        if cfg.use_period_scan:
+            raise NotImplementedError(
+                "BatchedServer slot-merge does not support period-scanned "
+                "hybrid caches yet; use serve.decode.generate for hybrids")
+        self._stacked = cfg.scan_layers and len(set(pattern)) == 1
+        self._batch_dim = 1 if self._stacked else 0
+        self.slot_req: list[Optional[Request]] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, np.int64)
+        self.slot_tok = np.zeros((batch_slots, 1), np.int32)
+        self.queue: list[Request] = []
+        self.stats = {"ticks": 0, "tokens_out": 0, "batch_occupancy": []}
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(p, t, c, pos, cfg))
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _merge_slot(self, new_caches, slot: int):
+        bd = self._batch_dim
+
+        def leaf(o, n):
+            idx = (slice(None),) * bd + (slice(slot, slot + 1),)
+            return o.at[idx].set(n[idx])
+
+        self.caches = jax.tree.map(leaf, self.caches, new_caches)
+
+    def _admit(self):
+        for slot in range(self.b):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[slot] = req
+                self._reset_slot(slot)
+                self._prefill_slot(slot, req)
+
+    def _reset_slot(self, slot: int):
+        fresh = lm.init_caches(self.cfg, self.b, self.max_len)
+        bd = self._batch_dim
+
+        def leaf(o, n):
+            idx = (slice(None),) * bd + (slice(slot, slot + 1),)
+            return o.at[idx].set(n[idx])
+
+        self.caches = jax.tree.map(leaf, self.caches, fresh)
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Token-by-token prefill through the decode step (keeps the engine
+        to one compiled function; launch/serve.py shows the bulk-prefill
+        variant used when prompts are long)."""
+        for i, tok in enumerate(req.prompt[:-1]):
+            t = jnp.asarray(np.broadcast_to(np.int32(tok), (self.b, 1)))
+            _, caches = self._decode(self.params, self.caches, t,
+                                     jnp.int32(i))
+            self._merge_slot(caches, slot)
+        self.slot_pos[slot] = len(req.prompt) - 1
+        self.slot_tok[slot, 0] = int(req.prompt[-1])
+
+    # -- one decode tick -------------------------------------------------------
+    def step(self) -> list[Request]:
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return []
+        self.stats["ticks"] += 1
+        self.stats["batch_occupancy"].append(len(active) / self.b)
+        finished = []
+        # group slots by position so each group is one batched device call
+        pos_groups: dict[int, list[int]] = {}
+        for s in active:
+            pos_groups.setdefault(int(self.slot_pos[s]), []).append(s)
+        for pos, slots in sorted(pos_groups.items()):
+            toks = jnp.asarray(self.slot_tok)
+            logits, caches = self._decode(self.params, self.caches, toks,
+                                          jnp.int32(pos))
+            for s in slots:
+                self._merge_slot(caches, s)
+                self.key, sub = jax.random.split(self.key)
+                nxt = int(np.asarray(sample(logits[s:s + 1], sub,
+                                            self.temperature,
+                                            self.cfg.vocab_size))[0, 0])
+                req = self.slot_req[s]
+                req.output.append(nxt)
+                self.stats["tokens_out"] += 1
+                self.slot_tok[s, 0] = nxt
+                self.slot_pos[s] += 1
+                if ((self.eos_id is not None and nxt == self.eos_id)
+                        or len(req.output) >= req.max_new_tokens
+                        or self.slot_pos[s] >= self.max_len - 1):
+                    req.done = True
+                    finished.append(req)
+                    self.slot_req[s] = None
+        return finished
+
+    def run(self) -> list[Request]:
+        done = []
+        while self.queue or any(r is not None for r in self.slot_req):
+            done.extend(self.step())
+        return done

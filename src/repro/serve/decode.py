@@ -1,0 +1,86 @@
+"""Serving steps: prefill + decode as jit-able pure functions.
+
+``make_serve_step`` builds the one-token decode step the decode_32k /
+long_500k dry-run shapes lower:  (params, caches, tokens, pos) ->
+(next_token_logits, caches).  Sampling (greedy / temperature) happens on
+top; the step itself is sampling-agnostic so the same compiled artifact
+serves both.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+def make_prefill(cfg: ModelConfig, *, cache_len: int, chunk: int = 512,
+                 constrain=lm._ID):
+    def prefill(params, batch):
+        logits, caches, _ = lm.forward(params, batch, cfg, mode="prefill",
+                                       chunk=chunk, cache_len=cache_len,
+                                       constrain=constrain)
+        return logits[:, -1:, :], caches
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, *, constrain=lm._ID):
+    def serve_step(params, caches, tokens_t, position):
+        logits, caches = lm.decode_step(params, tokens_t, caches, position,
+                                        cfg, constrain=constrain)
+        return logits, caches
+
+    return serve_step
+
+
+def sample(logits: jax.Array, key, temperature: float = 0.0,
+           vocab_size: Optional[int] = None) -> jax.Array:
+    """logits [B, 1, V_pad] -> tokens [B, 1].  t=0 -> greedy."""
+    if vocab_size is not None and logits.shape[-1] > vocab_size:
+        neg = jnp.full((logits.shape[-1] - vocab_size,), -1e30,
+                       logits.dtype)
+        logits = logits.at[..., vocab_size:].set(neg)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
+def generate(params, cfg: ModelConfig, prompt_tokens: jax.Array, *,
+             max_new_tokens: int, temperature: float = 0.0, seed: int = 0,
+             chunk: int = 256, eos_id: Optional[int] = None):
+    """Simple batched generation loop (greedy/temperature).
+
+    prompt_tokens [B, S0] int32 -> [B, S0 + max_new_tokens].
+    The decode loop is a lax.scan (compiled once, O(1) HLO in steps).
+    """
+    b, s0 = prompt_tokens.shape
+    total = s0 + max_new_tokens
+    logits, caches = lm.forward(params, {"tokens": prompt_tokens}, cfg,
+                                mode="prefill", chunk=chunk,
+                                cache_len=total)[0:2]
+    key = jax.random.PRNGKey(seed)
+    first = sample(logits[:, -1:, :], key, temperature, cfg.vocab_size)
+
+    def step(carry, t):
+        tok, caches, key, done = carry
+        key, sub = jax.random.split(key)
+        lg, caches = lm.decode_step(params, tok, caches, t, cfg)
+        nxt = sample(lg, sub, temperature, cfg.vocab_size)
+        if eos_id is not None:
+            done = done | (tok[:, 0] == eos_id)
+            nxt = jnp.where(done[:, None], eos_id, nxt)
+        return (nxt, caches, key, done), tok
+
+    done0 = jnp.zeros((b,), bool)
+    (_, _, _, _), toks = jax.lax.scan(
+        step, (first, caches, key, done0),
+        jnp.arange(s0, total, dtype=jnp.int32))
+    gen = jnp.swapaxes(toks[..., 0], 0, 1)          # [B, max_new]
+    return jnp.concatenate([prompt_tokens, gen], axis=1)

@@ -1,0 +1,141 @@
+"""Training step factory: loss, grad, optimizer update -- pjit-ready.
+
+``make_train_step(cfg, optimizer, mesh)`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with NamedSharding in/out specs (see launch/train.py and
+launch/dryrun.py).  Microbatching (gradient accumulation) is a lax.scan so
+the HLO stays O(1) in the number of microbatches.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train.optimizers import Optimizer
+
+MOE_LB_COEF = 0.01
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab_size: int,
+                  mask: Optional[jax.Array] = None):
+    """Mean CE over valid positions; padded-vocab columns are excluded.
+
+    Vocab-sharding-safe: the label logit is extracted with a fused
+    iota==label masked reduction (not take_along_axis), so under a
+    vocab-sharded logits layout GSPMD reduces locally + one small psum
+    instead of all-gathering the [B, S, V] tensor.
+    """
+    v_pad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, (v_pad,), 0)
+    if v_pad > vocab_size:
+        pad_mask = (vocab_ids >= vocab_size)
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)                     # [B, S]
+    sel = (vocab_ids == labels[..., None])
+    label_logit = jnp.sum(jnp.where(sel, logits, 0.0), axis=-1)
+    ll = label_logit - lse
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0), mask.sum()
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, attn_impl="auto",
+            chunk=512, constrain=lm._ID, attn_unroll=False,
+            scan_unroll=False):
+    logits, _, aux = lm.forward(params, batch, cfg, mode="train",
+                                attn_impl=attn_impl, chunk=chunk,
+                                constrain=constrain, attn_unroll=attn_unroll,
+                                scan_unroll=scan_unroll)
+    if cfg.causal:
+        # next-token prediction on the text stream
+        tokens = batch["tokens"]
+        text_logits = logits[:, -tokens.shape[1]:]       # skip patch slots
+        ce, denom = cross_entropy(text_logits[:, :-1], tokens[:, 1:],
+                                  cfg.vocab_size, batch.get("mask"))
+    else:
+        # encoder-only (hubert): per-position classification
+        ce, denom = cross_entropy(logits, batch["labels"], cfg.vocab_size,
+                                  batch.get("mask"))
+    total = ce
+    metrics = {"loss": ce, "tokens": denom}
+    if cfg.moe is not None:
+        lb = aux["load_balance_loss"] / cfg.num_layers
+        total = total + MOE_LB_COEF * lb + aux["router_z_loss"]
+        metrics.update(load_balance=lb, drop_fraction=aux["drop_fraction"]
+                       / cfg.num_layers)
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                    microbatches: int = 1, attn_impl: str = "auto",
+                    chunk: int = 512, constrain=lm._ID, attn_unroll=False,
+                    scan_unroll=False, grad_shardings=None,
+                    accum_dtype=None):
+    """``accum_dtype``: gradient-accumulation dtype (default f32).  At the
+    1T-param scale the f32 accumulator alone is 8 GB/device on 512 chips;
+    bf16 accumulation halves it (the per-microbatch gradient is still
+    computed in f32 -- only the running sum is stored compressed)."""
+    acc_dt = jnp.dtype(accum_dtype) if accum_dtype else jnp.float32
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, cfg=cfg, attn_impl=attn_impl, chunk=chunk,
+                          constrain=constrain, attn_unroll=attn_unroll,
+                          scan_unroll=scan_unroll),
+        has_aux=True)
+
+    def shard_grads(grads):
+        # Pin gradient shardings to the param shardings: GSPMD propagation
+        # can lose the fsdp axis through gather/scatter (MoE dispatch),
+        # silently replicating TB-scale f32 gradients (measured on
+        # kimi-k2: 22.5 GB per expert tensor -- see EXPERIMENTS.md).
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                            grad_shardings)
+
+    def single(params, opt_state, batch):
+        (_, metrics), grads = grad_fn(params, batch)
+        grads = shard_grads(grads)
+        params, opt_state, opt_metrics = optimizer.update(grads, opt_state,
+                                                          params)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    if microbatches == 1:
+        return single
+
+    def accumulated(params, opt_state, batch):
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def acc_step(carry, mb):
+            (_, m), g = grad_fn(params, mb)
+            g = shard_grads(g)
+            acc, msum = carry
+            acc = jax.tree.map(lambda a, gg: a + gg.astype(acc_dt), acc, g)
+            msum = jax.tree.map(jnp.add, msum, m)
+            return (acc, msum), None
+
+        zeros_g = shard_grads(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params))
+        (_, m0), g0 = grad_fn(params, jax.tree.map(lambda x: x[0], micro))
+        g0 = jax.tree.map(lambda g: g.astype(acc_dt), shard_grads(g0))
+        (grads, msum), _ = jax.lax.scan(
+            acc_step, (jax.tree.map(jnp.add, zeros_g, g0), m0),
+            jax.tree.map(lambda x: x[1:], micro))
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        metrics = jax.tree.map(lambda m: m / microbatches, msum)
+        params, opt_state, opt_metrics = optimizer.update(grads, opt_state,
+                                                          params)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return accumulated

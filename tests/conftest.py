@@ -1,0 +1,42 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here -- smoke
+tests and benchmarks must see the single real CPU device.  Multi-device
+tests spawn subprocesses with their own XLA_FLAGS (see helpers below)."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+def run_with_devices(code: str, num_devices: int = 8, timeout: int = 600):
+    """Run a python snippet in a subprocess with N fake XLA CPU devices."""
+    env = dict(os.environ)
+    kept = " ".join(
+        tok for tok in env.get("XLA_FLAGS", "").split()
+        if not tok.startswith("--xla_force_host_platform_device_count"))
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={num_devices} " + kept)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def sbm_small():
+    from repro.graph.sbm import sample_sbm
+
+    return sample_sbm(400, seed=11)
+
+
+@pytest.fixture(scope="session")
+def sbm_medium():
+    from repro.graph.sbm import sample_sbm
+
+    return sample_sbm(2000, seed=12)

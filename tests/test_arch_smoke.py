@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned arch instantiates its REDUCED config (same family: few
+layers, small width, few experts, tiny vocab) and runs one forward and one
+train step on CPU, asserting output shapes and no NaNs.  Full configs are
+exercised only by the dry-run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import lm
+from repro.train.loop import make_train_step
+from repro.train.optimizers import adamw
+
+
+def _batch_for(cfg, b=2, s=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if cfg.frontend == "frame":
+        return {"frames": jax.random.normal(key, (b, s, cfg.frontend_dim)),
+                "labels": jax.random.randint(key, (b, s), 0,
+                                             cfg.vocab_size)}
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.frontend == "patch":
+        batch["patches"] = jax.random.normal(
+            key, (b, cfg.frontend_tokens, cfg.frontend_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch_for(cfg)
+    logits, _, aux = lm.forward(params, batch, cfg, mode="train", chunk=8)
+    b = 2
+    s = 16 + (cfg.frontend_tokens if cfg.frontend == "patch" else 0)
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    if cfg.moe is not None:
+        assert bool(jnp.isfinite(aux["load_balance_loss"]))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_one_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+    step = make_train_step(cfg, opt, chunk=8)
+    batch = _batch_for(cfg)
+    new_params, _, metrics = jax.jit(step)(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    # params actually moved
+    delta = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         params, new_params)
+    assert max(jax.tree.leaves(delta)) > 0, f"{arch}: no param update"
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_NAMES
+                                  if get_config(a).has_decode])
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 16
+    batch = _batch_for(cfg, b, s)
+    ref, _, _ = lm.forward(params, batch, cfg, mode="train", chunk=8)
+    half = 9
+    pbatch = dict(batch)
+    pbatch["tokens"] = batch["tokens"][:, :half]
+    total = ref.shape[1]
+    logits0, caches, _ = lm.forward(params, pbatch, cfg, mode="prefill",
+                                    chunk=4, cache_len=total)
+    outs = [logits0]
+    start = logits0.shape[1]
+    toks = batch["tokens"]
+    for t in range(start, total):
+        i = half + (t - start)
+        lg, caches = lm.decode_step(params, toks[:, i:i + 1], caches,
+                                    jnp.int32(t), cfg)
+        outs.append(lg)
+    full = jnp.concatenate(outs, axis=1)
+    err = float(jnp.abs(full - ref).max())
+    assert err < 2e-3, f"{arch}: decode diverges from forward ({err})"
+
+
+def test_param_counts_match_published():
+    """The analytic param counts must land on the published model sizes."""
+    expect = {
+        "kimi-k2-1t-a32b": (1.04e12, 0.07),
+        "deepseek-moe-16b": (16.4e9, 0.07),
+        "mamba2-2.7b": (2.7e9, 0.10),
+        "chatglm3-6b": (6.2e9, 0.10),
+        "command-r-35b": (35e9, 0.10),
+        "qwen2-vl-72b": (72e9, 0.06),
+        "granite-3-8b": (8e9, 0.15),
+        "recurrentgemma-2b": (2.7e9, 0.15),
+        # hubert published ~0.96B uses a 2-matrix GELU MLP; this framework
+        # standardizes on 3-matrix SwiGLU (+0.31B) -- recorded adaptation.
+        "hubert-xlarge": (1.26e9, 0.15),
+        "qwen3-0.6b": (0.6e9, 0.15),
+    }
+    for arch, (target, tol) in expect.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < tol, \
+            f"{arch}: {n/1e9:.2f}B vs published {target/1e9:.2f}B"
+
+
+def test_active_params_kimi():
+    cfg = get_config("kimi-k2-1t-a32b")
+    active = cfg.active_param_count()
+    assert abs(active - 32e9) / 32e9 < 0.15, f"{active/1e9:.1f}B != ~32B"

@@ -1,0 +1,150 @@
+"""Fault tolerance: checkpoint atomicity, resume determinism, elastic
+re-shard, Young/Daly interval."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.checkpoint.manager import CheckpointManager, suggest_interval
+from conftest import run_with_devices
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 16)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jnp.float32(3.5)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t, {"note": "x"})
+    like = jax.eval_shape(lambda: t)
+    out, extra = ckpt.restore(str(tmp_path), 7, like)
+    assert extra == {"note": "x"}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_available_steps_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), interval=1, keep_last=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, t)
+    mgr.wait()
+    assert ckpt.available_steps(str(tmp_path)) == [3, 4]
+    mgr.close()
+
+
+def test_crash_during_save_never_corrupts(tmp_path):
+    """Failure injection: a writer crash mid-save leaves the previous
+    checkpoint intact and loadable (atomic rename)."""
+    t = _tree()
+    calls = []
+
+    def bomb(step):
+        calls.append(step)
+        if step == 2:
+            raise RuntimeError("injected disk failure")
+
+    mgr = CheckpointManager(str(tmp_path), interval=1, failure_hook=bomb)
+    mgr.save_async(1, t)
+    mgr.wait()
+    mgr.save_async(2, t)
+    with pytest.raises(RuntimeError, match="injected"):
+        mgr.wait()
+    # step 1 still valid, step 2 absent, no temp junk interferes with load
+    assert mgr.latest_step() == 1
+    like = jax.eval_shape(lambda: t)
+    out, _ = ckpt.restore(str(tmp_path), 1, like)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(t["a"]))
+    mgr.close()
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    bad = {"a": jnp.zeros((4, 4)), "nested": t["nested"]}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(str(tmp_path), 1, jax.eval_shape(lambda: bad))
+
+
+def test_resume_determinism(tmp_path):
+    """Train 12 steps straight vs 6 + restart + 6: identical params.
+    This is the core fault-tolerance contract (deterministic data +
+    checkpoint completeness)."""
+    from repro.launch.train import main as train_main
+
+    d1 = str(tmp_path / "run_straight")
+    d2 = str(tmp_path / "run_restart")
+    base = ["--arch", "qwen3-0.6b", "--reduced", "--batch", "4", "--seq",
+            "32", "--log-every", "100"]
+    train_main(base + ["--steps", "12", "--ckpt-dir", d1,
+                       "--ckpt-interval", "100"])
+    train_main(base + ["--steps", "6", "--ckpt-dir", d2,
+                       "--ckpt-interval", "100"])
+    train_main(base + ["--steps", "12", "--ckpt-dir", d2,
+                       "--ckpt-interval", "100"])
+
+    s1 = ckpt.available_steps(d1)[-1]
+    s2 = ckpt.available_steps(d2)[-1]
+    assert s1 == s2 == 12
+    import json
+    with open(os.path.join(d1, f"step_{s1:010d}", "manifest.json")) as f:
+        m1 = json.load(f)
+    with open(os.path.join(d2, f"step_{s2:010d}", "manifest.json")) as f:
+        m2 = json.load(f)
+    assert m1["digest"] == m2["digest"], \
+        "restarted run diverged from uninterrupted run"
+
+
+def test_elastic_reshard_across_meshes():
+    """Save on a (4,2) mesh, restore on (2,4) -- any-to-any re-shard."""
+    code = """
+import tempfile, jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh_for
+from repro.distributed.sharding import param_shardings
+from repro.distributed.elastic import restore_on_mesh
+from repro.checkpoint import ckpt
+from repro.models import lm
+from repro.configs import get_config
+
+cfg = get_config('qwen3-0.6b').reduced()
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+abstract = jax.eval_shape(lambda: params)
+
+mesh1 = make_mesh_for(8, model_parallel=2)     # (4, 2)
+sh1 = param_shardings(abstract, mesh1)
+p1 = jax.device_put(params, sh1)
+d = tempfile.mkdtemp()
+ckpt.save(d, 5, p1)
+
+mesh2 = make_mesh_for(8, model_parallel=4)     # (2, 4)
+p2, _ = restore_on_mesh(d, 5, abstract, mesh2)
+for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print('OK')
+"""
+    assert "OK" in run_with_devices(code, 8)
+
+
+def test_elastic_replan():
+    from repro.distributed.elastic import replan_mesh
+
+    plan = replan_mesh(512, model_parallel=16, global_batch=256, pods=2)
+    assert plan.mesh_shape == (2, 16, 16)
+    # lose 128 nodes: data axis shrinks to the largest batch divisor (8,
+    # not 12 -- uneven per-replica batches are not allowed)
+    plan = replan_mesh(384, model_parallel=16, global_batch=256, pods=2)
+    assert plan.mesh_shape == (2, 8, 16)
+    assert 256 % (plan.mesh_shape[0] * plan.mesh_shape[1]) == 0
+
+
+def test_young_daly_interval():
+    # 60 s checkpoint, 1000 nodes of 5-year MTBF, 10 s steps
+    steps = suggest_interval(60.0, 5 * 365 * 24, 1000, 10.0)
+    assert 10 <= steps <= 1000

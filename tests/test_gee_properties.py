@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) on GEE's mathematical invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gee import GEEOptions, gee_sparse_jax, weight_matrix_dense
+from repro.graph.containers import edge_list_from_numpy, symmetrize
+
+
+@st.composite
+def random_graph(draw, max_nodes=40, max_edges=120, max_classes=5):
+    n = draw(st.integers(2, max_nodes))
+    e = draw(st.integers(1, max_edges))
+    k = draw(st.integers(1, max_classes))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=e, max_size=e))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=e, max_size=e))
+    w = draw(st.lists(st.floats(0.1, 5.0, allow_nan=False), min_size=e,
+                      max_size=e))
+    labels = draw(st.lists(st.integers(-1, k - 1), min_size=n, max_size=n))
+    return (np.array(src, np.int32), np.array(dst, np.int32),
+            np.array(w, np.float32), np.array(labels, np.int32), n, k)
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_graph())
+def test_permutation_equivariance(g):
+    """Relabeling nodes by a permutation permutes Z's rows identically."""
+    src, dst, w, labels, n, k = g
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+    z = np.asarray(gee_sparse_jax(edges, jnp.asarray(labels), k, opts))
+
+    perm = np.random.default_rng(0).permutation(n).astype(np.int32)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(n, dtype=np.int32)
+    edges_p = symmetrize(edge_list_from_numpy(perm[src], perm[dst], w, n))
+    labels_p = np.full(n, -1, np.int32)
+    labels_p[perm] = labels
+    z_p = np.asarray(gee_sparse_jax(edges_p, jnp.asarray(labels_p), k, opts))
+    np.testing.assert_allclose(z_p[perm], z, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_graph(), st.floats(0.25, 4.0, allow_nan=False))
+def test_weight_scale_linearity(g, c):
+    """Without Laplacian/correlation, Z is linear in the edge weights."""
+    src, dst, w, labels, n, k = g
+    e1 = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    e2 = symmetrize(edge_list_from_numpy(src, dst, c * w, n))
+    z1 = np.asarray(gee_sparse_jax(e1, jnp.asarray(labels), k))
+    z2 = np.asarray(gee_sparse_jax(e2, jnp.asarray(labels), k))
+    np.testing.assert_allclose(z2, c * z1, rtol=2e-4, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_graph())
+def test_laplacian_scale_invariance(g):
+    """With Laplacian normalization, scaling all weights is a no-op."""
+    src, dst, w, labels, n, k = g
+    opts = GEEOptions(laplacian=True)
+    e1 = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    e2 = symmetrize(edge_list_from_numpy(src, dst, 3.0 * w, n))
+    z1 = np.asarray(gee_sparse_jax(e1, jnp.asarray(labels), k, opts))
+    z2 = np.asarray(gee_sparse_jax(e2, jnp.asarray(labels), k, opts))
+    np.testing.assert_allclose(z2, z1, rtol=2e-4, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_graph())
+def test_correlation_rows_unit_or_zero(g):
+    src, dst, w, labels, n, k = g
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    z = np.asarray(gee_sparse_jax(edges, jnp.asarray(labels), k,
+                                  GEEOptions(correlation=True)))
+    norms = np.linalg.norm(z, axis=1)
+    assert np.all((np.abs(norms - 1) < 1e-4) | (norms < 1e-6))
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_graph())
+def test_weight_matrix_columns_sum_to_one(g):
+    """Each class column of W sums to 1 (or 0 for empty classes)."""
+    _, _, _, labels, n, k = g
+    w = np.asarray(weight_matrix_dense(jnp.asarray(labels), k))
+    col = w.sum(axis=0)
+    present = np.bincount(labels[labels >= 0], minlength=k) > 0
+    np.testing.assert_allclose(col[present], 1.0, atol=1e-5)
+    np.testing.assert_allclose(col[~present], 0.0, atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graph())
+def test_embedding_row_mass(g):
+    """Without lap/corr, row i of Z sums to sum_j w_ij / n_{y_j} -- i.e.
+    the total label-normalized mass seen by node i; padding-free check that
+    no mass is lost or duplicated by the scatter."""
+    src, dst, w, labels, n, k = g
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    z = np.asarray(gee_sparse_jax(edges, jnp.asarray(labels), k))
+    nk = np.bincount(labels[labels >= 0], minlength=k).astype(np.float64)
+    winv = np.where(nk > 0, 1.0 / np.maximum(nk, 1), 0.0)
+    expected = np.zeros(n)
+    s2 = np.concatenate([src, dst])
+    d2 = np.concatenate([dst, src])
+    w2 = np.concatenate([w, w])
+    # symmetrize() zeroes the reverse copy of self loops; mirror that.
+    loop = src == dst
+    w2[len(src):][loop] = 0.0
+    for s, d, ww in zip(s2, d2, w2):
+        if labels[d] >= 0:
+            expected[s] += ww * winv[labels[d]]
+    np.testing.assert_allclose(z.sum(axis=1), expected, rtol=1e-4, atol=1e-5)

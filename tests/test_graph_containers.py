@@ -1,0 +1,86 @@
+"""Graph container invariants: edge list <-> CSR <-> ELL <-> dense."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graph.containers import (EdgeList, add_self_loops,
+                                    edge_list_from_numpy, edges_to_csr_host,
+                                    edges_to_ell, degrees, symmetrize,
+                                    to_dense)
+from repro.graph.sbm import sample_sbm
+from repro.graph.datasets import TABLE2, synth_like
+
+
+def test_ell_matches_dense(sbm_small):
+    s = sbm_small
+    ell = edges_to_ell(s.edges)
+    n = s.edges.num_nodes
+    a_dense = np.asarray(to_dense(s.edges))
+    a_ell = np.zeros_like(a_dense)
+    cols, vals = np.asarray(ell.cols), np.asarray(ell.vals)
+    for r in range(n):
+        for c, v in zip(cols[r], vals[r]):
+            if v != 0:
+                a_ell[r, c] += v
+    np.testing.assert_allclose(a_ell, a_dense, atol=1e-6)
+
+
+def test_csr_host_matches_scipy(sbm_small):
+    import scipy.sparse as sp
+
+    s = sbm_small
+    csr = edges_to_csr_host(s.edges)
+    e = s.edges.num_edges
+    ref = sp.csr_array((np.asarray(s.edges.weight)[:e],
+                        (np.asarray(s.edges.src)[:e],
+                         np.asarray(s.edges.dst)[:e])),
+                       shape=(s.edges.num_nodes, s.edges.num_nodes))
+    ours = sp.csr_array((csr.data, csr.indices, csr.indptr), shape=csr.shape)
+    assert (ref != ours).nnz == 0
+
+
+def test_symmetrize_degrees():
+    src = np.array([0, 1, 2, 2])
+    dst = np.array([1, 2, 0, 2])          # includes a self loop 2-2
+    e = symmetrize(edge_list_from_numpy(src, dst, None, 3))
+    deg = np.asarray(degrees(e))
+    # undirected degrees: node0: edges(0,1),(2,0) -> 2; node1: (0,1),(1,2) -> 2
+    # node2: (1,2),(2,0),(2,2 self loop counted once) -> 3
+    np.testing.assert_allclose(deg, [2.0, 2.0, 3.0])
+
+
+def test_add_self_loops_on_dense():
+    src, dst = np.array([0]), np.array([1])
+    e = edge_list_from_numpy(src, dst, None, 3)
+    a = np.asarray(to_dense(add_self_loops(e)))
+    np.testing.assert_allclose(a, np.array([[1, 1, 0], [0, 1, 0], [0, 0, 1]],
+                                           np.float32))
+
+
+def test_padding_preserved_through_with_padding(sbm_small):
+    s = sbm_small
+    p = s.edges.with_padding(1000)
+    assert p.padded_size % 1000 == 0
+    assert p.num_edges == s.edges.num_edges
+    np.testing.assert_array_equal(
+        np.asarray(p.weight[s.edges.padded_size:]), 0.0)
+
+
+def test_csr_storage_advantage():
+    """Paper Fig.1 claim: CSR < edge list (3E) storage when E > R + 1."""
+    ds = synth_like(TABLE2["citeseer"], seed=0)
+    csr = edges_to_csr_host(ds.edges)
+    e = ds.edges.num_edges
+    edge_list_entries = 3 * e
+    csr_entries = len(csr.indptr) + len(csr.indices) + len(csr.data)
+    assert csr_entries < edge_list_entries
+    assert csr_entries == (ds.edges.num_nodes + 1) + 2 * e
+
+
+def test_ell_truncation_cap():
+    src = np.array([0, 0, 0, 0])
+    dst = np.array([1, 2, 3, 4])
+    e = edge_list_from_numpy(src, dst, None, 5)
+    ell = edges_to_ell(e, max_degree=2)
+    assert ell.cols.shape[1] == 2
+    assert float(jnp.sum(ell.vals)) == 2.0

@@ -1,0 +1,235 @@
+"""Model-layer unit tests: attention schedules, SSM/RG-LRU recurrences,
+MoE dispatch invariants, rope variants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import lm
+from repro.models.attention import (attention_decode, attention_forward,
+                                    init_attention, _project_qkv)
+from repro.models.config import (ModelConfig, MoEConfig, RGLRUConfig,
+                                 SSMConfig)
+from repro.models.moe import capacity, init_moe, moe_forward
+from repro.models.rglru import (init_rglru, init_rglru_cache, rglru_decode,
+                                rglru_forward)
+from repro.models.ssm import init_ssm, init_ssm_cache, ssm_decode, ssm_forward
+
+
+def _attn_cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=1, d_model=32,
+                num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=100,
+                head_dim=8)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _naive_attention(params, x, positions, cfg):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, x, positions, cfg)
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) * hd ** -0.5
+    dq = positions[:, None, None, :, None]
+    dk = positions[:, None, None, None, :]
+    mask = jnp.ones_like(logits, bool)
+    if cfg.causal:
+        mask &= dk <= dq
+    if cfg.sliding_window is not None:
+        mask &= dq - dk < cfg.sliding_window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, -1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v).reshape(b, s, h * hd)
+    return out @ params["wo"]
+
+
+ATTN_VARIANTS = [
+    ("causal", {}),
+    ("qknorm", dict(qk_norm=True)),
+    ("window", dict(sliding_window=16)),
+    ("encoder", dict(causal=False, rope="none")),
+    ("rope2d", dict(rope="rope2d")),
+    ("mrope", dict(rope="mrope")),
+    ("bias", dict(attn_bias=True)),
+    ("mqa", dict(num_kv_heads=1)),
+]
+
+
+@pytest.mark.parametrize("name,kw", ATTN_VARIANTS)
+@pytest.mark.parametrize("impl", ["masked", "triangular"])
+def test_attention_impls_match_naive(name, kw, impl):
+    cfg = _attn_cfg(**kw)
+    if impl == "triangular" and not cfg.causal:
+        pytest.skip("triangular is causal-only")
+    params = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+    ref = _naive_attention(params, x, pos, cfg)
+    y, _ = attention_forward(params, x, pos, cfg, impl=impl, chunk=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=3e-4)
+
+
+def test_banded_matches_naive_windowed():
+    cfg = _attn_cfg(sliding_window=16)
+    params = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+    ref = _naive_attention(params, x, pos, cfg)
+    y, _ = attention_forward(params, x, pos, cfg, impl="banded", chunk=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=3e-4)
+
+
+def test_attention_unroll_identical():
+    """unroll=True is an analysis knob: results must be bit-comparable."""
+    cfg = _attn_cfg()
+    params = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+    y1, _ = attention_forward(params, x, pos, cfg, impl="masked", chunk=16)
+    y2, _ = attention_forward(params, x, pos, cfg, impl="masked", chunk=16,
+                              unroll=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+
+
+def test_ring_buffer_decode_any_prefill_length():
+    cfg = _attn_cfg(sliding_window=8)
+    params = init_attention(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, 32))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    ref, _ = attention_forward(params, x, pos, cfg, impl="masked", chunk=8)
+    for half in (12, 17, 20):
+        y0, cache = attention_forward(params, x[:, :half], pos[:, :half],
+                                      cfg, chunk=4, return_cache=True)
+        ys = [y0]
+        for t in range(half, s):
+            yt, cache = attention_decode(params, x[:, t:t + 1], cache,
+                                         jnp.int32(t), cfg)
+            ys.append(yt)
+        err = float(jnp.abs(jnp.concatenate(ys, 1) - ref).max())
+        assert err < 3e-4, (half, err)
+
+
+# --- SSM ---------------------------------------------------------------
+
+def _ssm_cfg(chunk=8):
+    return ModelConfig(name="t", family="ssm", num_layers=1, d_model=32,
+                       num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=100,
+                       ssm=SSMConfig(state_dim=8, head_dim=8, expand=2,
+                                     chunk=chunk))
+
+
+def test_ssd_chunked_equals_sequential():
+    cfg = _ssm_cfg()
+    params = init_ssm(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 32
+    u = jax.random.normal(jax.random.PRNGKey(1), (b, s, 32)) * 0.5
+    cache = init_ssm_cache(cfg, b, jnp.float32)
+    ys = []
+    for t in range(s):
+        yt, cache = ssm_decode(params, u[:, t:t + 1], cache, cfg)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    y_par, st = ssm_forward(params, u, cfg, return_state=True)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(cache["h"]),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 32])
+def test_ssd_chunk_size_invariance(chunk):
+    cfg0 = _ssm_cfg(8)
+    params = init_ssm(jax.random.PRNGKey(0), cfg0)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32)) * 0.5
+    ref, _ = ssm_forward(params, u, cfg0)
+    out, _ = ssm_forward(params, u, _ssm_cfg(chunk))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+# --- RG-LRU -------------------------------------------------------------
+
+def test_rglru_scan_equals_sequential():
+    cfg = ModelConfig(name="t", family="hybrid", num_layers=3, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=100,
+                      head_dim=8, rglru=RGLRUConfig(lru_width=48))
+    params = init_rglru(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, 32)) * 0.5
+    cache = init_rglru_cache(cfg, b, jnp.float32)
+    ys = []
+    for t in range(s):
+        yt, cache = rglru_decode(params, x[:, t:t + 1], cache, cfg)
+        ys.append(yt)
+    y_seq = jnp.concatenate(ys, axis=1)
+    y_par, st = rglru_forward(params, x, cfg, return_state=True)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(cache["h"]),
+                               atol=1e-4)
+
+
+def test_rglru_decay_bounded():
+    """RG-LRU decay must stay in (0, 1) -- the stability invariant."""
+    cfg = ModelConfig(name="t", family="hybrid", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=1, d_ff=32, vocab_size=10,
+                      head_dim=8, rglru=RGLRUConfig(lru_width=16))
+    params = init_rglru(jax.random.PRNGKey(0), cfg)
+    from repro.models.rglru import _lru_coeffs
+
+    u = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16)) * 10
+    log_a, _ = _lru_coeffs(params, u, cfg.rglru.c_exponent)
+    a = np.asarray(jnp.exp(log_a))
+    assert (a > 0).all() and (a < 1).all()
+
+
+# --- MoE ----------------------------------------------------------------
+
+def test_moe_dropless_equals_dense_computation():
+    """With ample capacity, sort-based dispatch == explicit per-token FFN."""
+    moe = MoEConfig(num_experts=4, top_k=2, d_expert=16, num_shared=0,
+                    capacity_factor=8.0)
+    params = init_moe(jax.random.PRNGKey(0), 8, moe, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8))
+    y, aux = moe_forward(params, x, moe)
+    assert float(aux["drop_fraction"]) == 0.0
+
+    # explicit reference: per-token loop over its top-k experts
+    xf = np.asarray(x.reshape(16, 8))
+    logits = xf @ np.asarray(params["router"])
+    probs = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+    ref = np.zeros_like(xf)
+    for t in range(16):
+        top = np.argsort(-probs[t])[:2]
+        ps = probs[t][top] / probs[t][top].sum()
+        for p_w, e_idx in zip(ps, top):
+            wg = np.asarray(params["we_gate"][e_idx])
+            wu = np.asarray(params["we_up"][e_idx])
+            wd = np.asarray(params["we_down"][e_idx])
+            g = xf[t] @ wg
+            u = xf[t] @ wu
+            h = g / (1 + np.exp(-g)) * u
+            ref[t] += p_w * (h @ wd)
+    np.testing.assert_allclose(np.asarray(y).reshape(16, 8), ref,
+                               atol=2e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    moe = MoEConfig(num_experts=2, top_k=1, d_expert=8, num_shared=0,
+                    capacity_factor=0.25)
+    params = init_moe(jax.random.PRNGKey(0), 8, moe, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 8))
+    _, aux = moe_forward(params, x, moe)
+    assert float(aux["drop_fraction"]) > 0.0
+
+
+def test_moe_capacity_formula():
+    moe = MoEConfig(num_experts=8, top_k=2, d_expert=4,
+                    capacity_factor=1.25)
+    c = capacity(1024, moe)
+    assert c >= 1024 * 2 * 1.25 / 8
+    assert c % 4 == 0

@@ -1,0 +1,220 @@
+"""Sharding rules: divisibility fallback, param/cache/grad shardings, the
+EP MoE path, and the logical-rule invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+
+def _mesh_2d():
+    from repro.launch.mesh import make_mesh_for
+
+    return make_mesh_for(1, 1)        # single device: shape checks only
+
+
+def test_spec_divisibility_fallback():
+    code = """
+import jax
+from repro.launch.mesh import make_mesh_for
+from repro.distributed.sharding import spec_for_shape
+from jax.sharding import PartitionSpec as P
+mesh = make_mesh_for(8, model_parallel=4)    # data=2, model=4
+# divisible: shard
+assert spec_for_shape((16, 8), ("fsdp", "mlp"), mesh) == P("data", "model")
+# heads=10 not divisible by model=4: fallback to replicated
+assert spec_for_shape((16, 10), ("fsdp", "heads_flat"), mesh) == P("data", None)
+# vocab 49155 not divisible: replicated
+assert spec_for_shape((49155, 16), ("vocab", "fsdp"), mesh) == P(None, "data")
+# batch spans (pod, data); pod missing from this mesh -> data only
+assert spec_for_shape((8, 4), ("batch", None), mesh) == P("data", None)
+# axis reuse forbidden: second 'model' user falls back
+assert spec_for_shape((8, 8, 8), ("experts", "mlp", None), mesh)[1] is None
+print('OK')
+"""
+    assert "OK" in run_with_devices(code, 8)
+
+
+def test_param_shardings_cover_all_archs():
+    code = """
+import jax
+from repro.launch.mesh import make_mesh_for
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import lm
+from repro.distributed.sharding import param_shardings
+mesh = make_mesh_for(8, model_parallel=2)
+for arch in ARCH_NAMES:
+    cfg = get_config(arch).reduced()
+    abstract = lm.abstract_params(cfg)
+    sh = param_shardings(abstract, mesh)
+    n_sharded = sum(
+        1 for s in jax.tree.leaves(sh)
+        if any(x is not None for x in s.spec))
+    assert n_sharded > 0, arch     # at least the big matrices shard
+print('OK')
+"""
+    assert "OK" in run_with_devices(code, 8)
+
+
+def test_optimizer_state_inherits_param_sharding():
+    code = """
+import jax
+from repro.launch.mesh import make_mesh_for
+from repro.configs import get_config
+from repro.models import lm
+from repro.distributed.sharding import param_shardings
+from repro.train.optimizers import adamw, adafactor
+from jax.sharding import PartitionSpec as P
+mesh = make_mesh_for(8, model_parallel=2)
+cfg = get_config('deepseek-moe-16b').reduced()
+abstract = lm.abstract_params(cfg)
+p_sh = param_shardings(abstract, mesh)
+for opt in (adamw(1e-3), adafactor(1e-3)):
+    o_abs = jax.eval_shape(opt.init, abstract)
+    o_sh = param_shardings(o_abs, mesh)
+    flat = {('/'.join(str(getattr(k, 'key', k)) for k in path)): s
+            for path, s in jax.tree_util.tree_flatten_with_path(o_sh)[0]}
+    # mu/nu of expert weights must keep the expert axis sharded
+    hits = [k for k in flat if 'we_gate' in k]
+    assert hits, flat.keys()
+    for k in hits:
+        assert flat[k].spec[1 if k.split('/')[-1] in ('vr','vc') else 1] \\
+            is not None or 'model' in str(flat[k].spec), (k, flat[k])
+print('OK')
+"""
+    assert "OK" in run_with_devices(code, 8)
+
+
+def test_cache_seq_sharding_fallback():
+    code = """
+import jax, jax.numpy as jnp
+from repro.launch.mesh import make_mesh_for
+from repro.distributed.sharding import cache_shardings
+from jax.sharding import PartitionSpec as P
+mesh = make_mesh_for(8, model_parallel=4)
+# kv=8 divisible by model=4: heads shard
+c1 = {'k': jax.ShapeDtypeStruct((2, 16, 8, 4), jnp.bfloat16),
+      'v': jax.ShapeDtypeStruct((2, 16, 8, 4), jnp.bfloat16),
+      'pos': jax.ShapeDtypeStruct((2, 16), jnp.int32)}
+s1 = cache_shardings(c1, mesh)
+assert s1['k'].spec[2] == 'model', s1['k'].spec
+# kv=2 NOT divisible by 4 -> seq dim shards instead (context parallelism)
+c2 = {'k': jax.ShapeDtypeStruct((2, 16, 2, 4), jnp.bfloat16),
+      'v': jax.ShapeDtypeStruct((2, 16, 2, 4), jnp.bfloat16),
+      'pos': jax.ShapeDtypeStruct((2, 16), jnp.int32)}
+s2 = cache_shardings(c2, mesh)
+assert s2['k'].spec[1] == 'model', s2['k'].spec
+assert s2['pos'].spec[1] == 'model', s2['pos'].spec
+print('OK')
+"""
+    assert "OK" in run_with_devices(code, 8)
+
+
+def test_moe_ep_matches_gspmd_and_grads():
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.models.config import MoEConfig
+from repro.models.moe import init_moe, moe_forward
+from repro.distributed.moe_ep import moe_forward_ep, applicable
+from repro.launch.mesh import make_mesh_for
+mesh = make_mesh_for(8, model_parallel=4)
+moe = MoEConfig(num_experts=8, top_k=2, d_expert=16, num_shared=1,
+                capacity_factor=8.0)
+params = init_moe(jax.random.PRNGKey(0), 32, moe, jnp.float32)
+for shape in ((4, 8, 32), (4, 1, 32)):       # sliced + duplicate modes
+    x = jax.random.normal(jax.random.PRNGKey(1), shape)
+    y_ref, _ = moe_forward(params, x, moe)
+    with mesh:
+        y_ep, _ = jax.jit(lambda p, xx: moe_forward_ep(p, xx, moe, mesh))(
+            params, x)
+    assert float(jnp.abs(y_ep - y_ref).max()) < 1e-4, shape
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32))
+g1 = jax.grad(lambda p: jnp.sum(moe_forward(p, x, moe)[0]**2))(params)
+def le(p):
+    with mesh:
+        return jnp.sum(moe_forward_ep(p, x, moe, mesh)[0]**2)
+g2 = jax.jit(jax.grad(le))(params)
+errs = jax.tree.map(
+    lambda a, b: float(jnp.abs(a-b).max()/(jnp.abs(a).max()+1e-9)), g1, g2)
+assert max(jax.tree.leaves(errs)) < 1e-3
+print('OK')
+"""
+    assert "OK" in run_with_devices(code, 8)
+
+
+def test_full_model_distributed_matches_single_device():
+    """The whole reduced model under an (2,2,2) pod mesh == single device."""
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.models import lm
+from repro.launch.mesh import make_mesh_for
+from repro.distributed.sharding import (batch_shardings, make_constrainer,
+                                        param_shardings)
+cfg = get_config('deepseek-moe-16b').reduced()
+params = lm.init_params(jax.random.PRNGKey(0), cfg)
+batch = {'tokens': jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                                      cfg.vocab_size)}
+ref, _, _ = lm.forward(params, batch, cfg, mode='train', chunk=8)
+
+mesh = make_mesh_for(8, model_parallel=2, pods=2)
+constrain = make_constrainer(mesh)
+p_sh = param_shardings(jax.eval_shape(lambda: params), mesh)
+b_sh = batch_shardings(jax.eval_shape(lambda: batch), mesh)
+p = jax.device_put(params, p_sh)
+b = jax.device_put(batch, b_sh)
+with mesh:
+    out = jax.jit(lambda pp, bb: lm.forward(pp, bb, cfg, mode='train',
+                                            chunk=8,
+                                            constrain=constrain)[0])(p, b)
+err = float(jnp.abs(out - ref).max())
+assert err < 5e-4, err
+print('OK', err)
+"""
+    assert "OK" in run_with_devices(code, 8)
+
+
+def test_moe_ep_serving_mode_matches():
+    """Weight-stationary serving EP == reference, across mesh splits."""
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.models.config import MoEConfig
+from repro.models.moe import init_moe, moe_forward
+from repro.distributed.moe_ep import moe_forward_ep
+from repro.launch.mesh import make_mesh_for
+moe = MoEConfig(num_experts=8, top_k=2, d_expert=16, num_shared=1,
+                capacity_factor=8.0)
+params = init_moe(jax.random.PRNGKey(0), 32, moe, jnp.float32)
+for mp, shape in [(4, (4, 2, 32)), (2, (8, 2, 32))]:
+    mesh = make_mesh_for(8, model_parallel=mp)
+    x = jax.random.normal(jax.random.PRNGKey(1), shape)
+    y_ref, _ = moe_forward(params, x, moe)
+    with mesh:
+        y_sv, _ = jax.jit(lambda p, xx: moe_forward_ep(
+            p, xx, moe, mesh, serving=True))(params, x)
+    assert float(jnp.abs(y_sv - y_ref).max()) < 1e-4, (mp, shape)
+print('OK')
+"""
+    assert "OK" in run_with_devices(code, 8)
+
+
+def test_serving_rules_never_shard_fsdp():
+    code = """
+import jax, jax.numpy as jnp
+from repro.launch.mesh import make_mesh_for
+from repro.distributed.sharding import (SERVING_RULES, spec_for_shape)
+from jax.sharding import PartitionSpec as P
+mesh = make_mesh_for(8, model_parallel=4)
+# training rules shard D over data; serving rules never do -- weight
+# COLUMNS take both axes instead (2-D TP)
+assert spec_for_shape((16, 8), ("fsdp", "mlp"), mesh) == P("data", "model")
+assert spec_for_shape((16, 8), ("fsdp", "mlp"), mesh,
+                      SERVING_RULES) == P(None, ("model", "data"))
+# expert F dim moves from pod (train) to data (serving)
+assert spec_for_shape((8, 16, 8), ("experts", "fsdp", "expert_ff"), mesh,
+                      SERVING_RULES) == P("model", None, "data")
+print('OK')
+"""
+    assert "OK" in run_with_devices(code, 8)

@@ -1,0 +1,188 @@
+"""Training loop, optimizers, data pipeline, serving engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import (DataConfig, batch_at, encoder_batch_at,
+                                 host_slice)
+from repro.models import lm
+from repro.serve.batching import BatchedServer, Request
+from repro.serve.decode import generate, sample
+from repro.train.loop import cross_entropy, loss_fn, make_train_step
+from repro.train.optimizers import (adafactor, adamw, clip_by_global_norm,
+                                    cosine_schedule)
+
+
+# --- optimizers ----------------------------------------------------------
+
+def _quadratic_problem(opt, steps=60):
+    target = jnp.asarray(np.random.default_rng(0).standard_normal((4, 8)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((4, 8)), "b": jnp.zeros((8,))}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.mean((p["w"] + p["b"][None, :] - target) ** 2)
+
+    grad = jax.grad(loss)
+    for _ in range(steps):
+        params, state, _ = opt.update(grad(params), state, params)
+    return float(loss(params))
+
+
+def test_adamw_converges():
+    assert _quadratic_problem(adamw(0.05, weight_decay=0.0)) < 0.02
+
+
+def test_adafactor_converges():
+    # the factored second moment is lossy on this rank-1-ish toy problem:
+    # adafactor plateaus near 0.09 where adamw reaches 0.02 -- assert the
+    # order-of-magnitude drop from the ~1.0 initial loss, not adamw parity
+    assert _quadratic_problem(adafactor(0.3, weight_decay=0.0),
+                              steps=150) < 0.15
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-4
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100, floor=0.1)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.int32(100))) == pytest.approx(0.1, abs=1e-3)
+
+
+# --- loss ---------------------------------------------------------------
+
+def test_cross_entropy_matches_naive():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((2, 5, 37)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 30, (2, 5)), jnp.int32)
+    ce, n = cross_entropy(logits, labels, vocab_size=30)
+    # naive with padded-vocab masking
+    lg = np.array(logits)            # writable copy
+    lg[..., 30:] = -1e30
+    p = np.exp(lg - lg.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    ll = np.log([p[b, s, labels[b, s]] for b in range(2) for s in range(5)])
+    assert float(ce) == pytest.approx(-ll.mean(), abs=1e-5)
+    assert float(n) == 10
+
+
+def test_padded_vocab_never_predicted():
+    """Sampling must never emit padded-vocab ids."""
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.standard_normal((4, 1, 64)) * 10, jnp.float32)
+    for t in (0.0, 1.0):
+        toks = sample(logits, jax.random.PRNGKey(0), t, vocab_size=40)
+        assert int(jnp.max(toks)) < 40
+
+
+def test_microbatching_equals_full_batch():
+    """Gradient accumulation must match the single-batch gradient."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw(1e-3)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                                          cfg.vocab_size)}
+    s1 = make_train_step(cfg, opt, microbatches=1, chunk=8)
+    s4 = make_train_step(cfg, opt, microbatches=4, chunk=8)
+    p1, _, m1 = jax.jit(s1)(params, opt.init(params), batch)
+    p4, _, m4 = jax.jit(s4)(params, opt.init(params), batch)
+    # losses averaged identically; params should match to fp tolerance
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_training_reduces_loss():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw(3e-3)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt, chunk=16))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    losses = []
+    for i in range(30):
+        batch = jax.tree.map(jnp.asarray, batch_at(dc, i))
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+
+
+# --- data pipeline --------------------------------------------------------
+
+def test_data_determinism():
+    dc = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=3)
+    a = batch_at(dc, 5)["tokens"]
+    b = batch_at(dc, 5)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    c = batch_at(dc, 6)["tokens"]
+    assert not np.array_equal(a, c)
+
+
+def test_host_slice_partitions():
+    dc = DataConfig(vocab_size=100, seq_len=8, global_batch=8)
+    full = batch_at(dc, 0)
+    parts = [host_slice(full, i, 4)["tokens"] for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full["tokens"])
+
+
+def test_encoder_batch_learnable():
+    dc = DataConfig(vocab_size=16, seq_len=8, global_batch=4)
+    b = encoder_batch_at(dc, 0, frontend_dim=32)
+    assert b["frames"].shape == (4, 8, 32)
+    assert b["labels"].shape == (4, 8)
+
+
+# --- serving --------------------------------------------------------------
+
+def test_generate_greedy_deterministic():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                                cfg.vocab_size)
+    out1 = generate(params, cfg, prompt, max_new_tokens=6)
+    out2 = generate(params, cfg, prompt, max_new_tokens=6)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (2, 12)
+    assert int(jnp.max(out1)) < cfg.vocab_size
+
+
+def test_batched_server_matches_generate():
+    """Continuous batching must produce the same greedy continuation as the
+    reference generate() loop."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(2), (5,), 0, cfg.vocab_size))
+    ref = np.asarray(generate(params, cfg,
+                              jnp.asarray(prompt)[None], max_new_tokens=5))
+    server = BatchedServer(params, cfg, batch_slots=2, max_len=32)
+    server.submit(Request(uid=0, prompt=prompt, max_new_tokens=5))
+    done = server.run()
+    assert len(done) == 1
+    np.testing.assert_array_equal(np.asarray(done[0].output), ref[0, 5:])
+
+
+def test_batched_server_slot_churn():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    server = BatchedServer(params, cfg, batch_slots=2, max_len=48)
+    for uid in range(5):
+        server.submit(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, 6))))
+    done = server.run()
+    assert len(done) == 5
+    assert all(r.done for r in done)
+    assert server.stats["tokens_out"] == sum(len(r.output) for r in done)
