@@ -32,10 +32,14 @@ def main(argv=None):
         print(f"--- {name}: {status} ({dt:.1f}s)")
 
     from benchmarks import (bench_gee_distributed, bench_gee_options,
-                            bench_gee_sbm, bench_quality, bench_storage,
-                            roofline)
+                            bench_gee_pallas, bench_gee_sbm, bench_quality,
+                            bench_storage, roofline)
 
     section("storage (paper Fig.1 / Sec.3)", bench_storage.run)
+    section("Pallas ELL backend (padding + runtime)",
+            lambda: bench_gee_pallas.run(sizes=(300, 600, 1200)
+                                         if not args.full
+                                         else (300, 600, 1200, 2400)))
     section("quality (sparse == dense, downstream)", bench_quality.run)
     section("SBM scaling (paper Fig.3)",
             lambda: bench_gee_sbm.run(full=args.full,

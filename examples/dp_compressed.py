@@ -14,13 +14,12 @@ import sys
 
 SNIPPET = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+from repro.distributed.compat import shard_map_nocheck
 from repro.distributed.compression import (compressed_psum_mean,
                                            wire_bytes_f32, wire_bytes_int8)
 
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((4,), ("data",))
 
 # toy regression model, replicated params, sharded batch
 def init():
@@ -55,10 +54,9 @@ def make_step(compressed):
                 g = jax.lax.pmean(g, "data")
             params = jax.tree.map(lambda p, gg: p - 0.1 * gg, params, g)
             return params, error, jax.lax.pmean(l, "data")
-        return shard_map(body, mesh=mesh,
-                         in_specs=(P(), P(), P("data"), P("data")),
-                         out_specs=(P(), P(), P()),
-                         check_vma=False)(params, error, x, y)
+        return shard_map_nocheck(body, mesh=mesh,
+                                 in_specs=(P(), P(), P("data"), P("data")),
+                                 out_specs=(P(), P(), P()))(params, error, x, y)
     return jax.jit(step)
 
 for compressed in (False, True):

@@ -23,8 +23,10 @@ from repro.graph.containers import EdgeList, edge_list_from_numpy, symmetrize
 class GEEEmbedder:
     """Fit/transform-style wrapper around sparse GEE.
 
-    backend: 'sparse_jax' (default), 'pallas', 'dense_jax', 'scipy',
+    backend: 'sparse_jax' (default), 'pallas', 'auto', 'dense_jax', 'scipy',
              'python_loop', or 'distributed'.
+    local_backend: per-shard compute used by 'distributed' --
+             'segment_sum' (default) or 'pallas' (ELL kernel per shard).
     """
 
     num_classes: int
@@ -33,6 +35,7 @@ class GEEEmbedder:
     backend: str = "sparse_jax"
     mesh: Optional[object] = None            # required for 'distributed'
     mesh_axes: tuple = ("data",)
+    local_backend: str = "segment_sum"       # 'distributed' only
 
     _edges: Optional[EdgeList] = dataclasses.field(default=None, repr=False)
     _labels: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
@@ -97,12 +100,9 @@ class GEEEmbedder:
             if self.mesh is None:
                 raise ValueError("distributed backend needs a mesh")
             z = gee_distributed(edges, labels, self.num_classes, self.options,
-                                mesh=self.mesh, axes=self.mesh_axes)
+                                mesh=self.mesh, axes=self.mesh_axes,
+                                local_backend=self.local_backend)
             return z[: edges.num_nodes]
-        if self.backend == "pallas":
-            from repro.kernels.ops import gee_pallas
-
-            return gee_pallas(edges, labels, self.num_classes, self.options)
         return gee(edges, labels, self.num_classes, self.options,
                    backend=self.backend)
 

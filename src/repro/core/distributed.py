@@ -28,12 +28,13 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.gee import GEEOptions, class_counts
+from repro.distributed.compat import shard_map, shard_map_nocheck
+
+from repro.core.gee import GEEOptions, class_weight_inv
 from repro.graph.containers import EdgeList, add_self_loops
-from repro.graph.partition import shard_edges
+from repro.graph.partition import shard_edges, shard_edges_to_ell
 
 
 def _axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
@@ -75,8 +76,7 @@ def _gee_distributed_jit(src, dst, weight, labels, num_classes: int,
                          axes: tuple[str, ...]):
     p = _axis_size(mesh, axes)
     n_pad = src_n_pad = labels.shape[0]          # labels pre-padded to mult of p
-    nk = class_counts(labels, num_classes)
-    winv = jnp.where(nk > 0, 1.0 / jnp.maximum(nk, 1.0), 0.0)
+    winv = class_weight_inv(labels, num_classes)
 
     def body(src_l, dst_l, w_l, labels_l, winv_l):
         z_part = _local_gee_partial(
@@ -99,26 +99,81 @@ def _gee_distributed_jit(src, dst, weight, labels, num_classes: int,
     return fn(src, dst, weight, labels, winv)
 
 
+@partial(jax.jit, static_argnames=("num_classes", "opts", "mesh", "axes",
+                                   "interpret"))
+def _gee_distributed_pallas_jit(cols, vals, labels, num_classes: int,
+                                opts: GEEOptions, mesh: Mesh,
+                                axes: tuple[str, ...], interpret: bool):
+    """Per-shard Pallas kernel: each device contracts its local ELL plane
+    (cols/vals rows = all N_pad nodes, columns = the device's edge subset)
+    and the reduce-scatter sums the partials -- identical collective pattern
+    to the segment-sum body."""
+    from repro.graph.ell import ell_planes
+    from repro.kernels.gee_spmm import gee_spmm
+
+    winv = class_weight_inv(labels, num_classes)
+
+    def body(cols_l, vals_l, labels_l, winv_l):
+        if opts.laplacian:
+            deg = jax.lax.psum(jnp.sum(vals_l, axis=1), axes)
+            dinv = jnp.where(deg > 0,
+                             jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
+            vals_scaled = vals_l * dinv[:, None] * dinv[cols_l]
+        else:
+            vals_scaled = vals_l
+        ylab, contrib = ell_planes(cols_l, vals_scaled, labels_l, winv_l)
+        z_part = gee_spmm(ylab, contrib, num_classes, block_rows=None,
+                          block_deg=None, deg_sub=None, interpret=interpret)
+        z_rows = jax.lax.psum_scatter(z_part, axes, scatter_dimension=0,
+                                      tiled=True)
+        if opts.correlation:
+            norm = jnp.sqrt(jnp.sum(z_rows * z_rows, axis=-1, keepdims=True))
+            z_rows = jnp.where(norm > 0, z_rows / jnp.maximum(norm, 1e-30),
+                               0.0)
+        return z_rows
+
+    # nocheck: jax has no replication rule for pallas_call inside shard_map
+    fn = shard_map_nocheck(body, mesh=mesh,
+                           in_specs=(P(axes, None), P(axes, None), P(), P()),
+                           out_specs=P(axes, None))
+    return fn(cols, vals, labels, winv)
+
+
 def gee_distributed(edges: EdgeList, labels, num_classes: int,
                     opts: GEEOptions = GEEOptions(), *, mesh: Mesh,
                     axes: tuple[str, ...] = ("data",),
-                    pre_sharded: bool = False) -> jax.Array:
+                    pre_sharded: bool = False,
+                    local_backend: str = "segment_sum") -> jax.Array:
     """Distributed sparse GEE.  Returns Z with rows sharded over ``axes``.
 
     ``pre_sharded=True`` skips the host-side shuffle/pad (the caller already
     produced device-ready arrays, e.g. the dry-run path).
+    ``local_backend`` selects the per-shard compute: ``"segment_sum"`` (the
+    O(E/P) scatter default) or ``"pallas"`` (each shard packs its edges into
+    an ELL plane and runs the ``gee_spmm`` kernel; same collectives).
     Row padding: Z has ``pad_nodes(N, P)`` rows; callers slice ``[:N]``.
     """
     p = _axis_size(mesh, axes)
     if opts.diag_aug:
         edges = add_self_loops(edges)
-    if not pre_sharded:
-        edges = shard_edges(edges, p)
     n_pad = pad_nodes(edges.num_nodes, p)
     labels = jnp.asarray(labels, jnp.int32)
     if labels.shape[0] < n_pad:
         labels = jnp.concatenate(
             [labels, jnp.full((n_pad - labels.shape[0],), -1, jnp.int32)])
+    if local_backend == "pallas":
+        if pre_sharded:
+            raise ValueError(
+                "pre_sharded edge arrays cannot feed local_backend='pallas' "
+                "(the ELL planes are packed from the unsharded edge list)")
+        cols, vals = shard_edges_to_ell(edges, p, num_rows=n_pad)
+        interpret = jax.default_backend() != "tpu"
+        return _gee_distributed_pallas_jit(cols, vals, labels, num_classes,
+                                           opts, mesh, tuple(axes), interpret)
+    if local_backend != "segment_sum":
+        raise ValueError(f"unknown local_backend {local_backend!r}")
+    if not pre_sharded:
+        edges = shard_edges(edges, p)
     return _gee_distributed_jit(edges.src, edges.dst, edges.weight, labels,
                                 num_classes, opts, mesh, tuple(axes))
 

@@ -70,6 +70,12 @@ def class_counts(labels: jax.Array, num_classes: int) -> jax.Array:
         valid.astype(jnp.float32), safe, num_segments=num_classes)
 
 
+def class_weight_inv(labels: jax.Array, num_classes: int) -> jax.Array:
+    """1/n_k per class (0 for empty classes): the W-matrix row scaling."""
+    nk = class_counts(labels, num_classes)
+    return jnp.where(nk > 0, 1.0 / jnp.maximum(nk, 1.0), 0.0)
+
+
 def weight_matrix_dense(labels: jax.Array, num_classes: int) -> jax.Array:
     """W [N, K]: row j = one_hot(y_j) / n_{y_j}; zero row for unknown."""
     nk = class_counts(labels, num_classes)
@@ -219,8 +225,7 @@ def gee_sparse_jax(edges: EdgeList, labels: jax.Array, num_classes: int,
     w = laplacian_edge_weights(edges) if opts.laplacian else edges.weight
 
     n, k = edges.num_nodes, num_classes
-    nk = class_counts(labels, k)
-    winv = jnp.where(nk > 0, 1.0 / jnp.maximum(nk, 1.0), 0.0)
+    winv = class_weight_inv(labels, k)
 
     yd = labels[edges.dst]                       # class of each neighbor
     valid = yd >= 0
@@ -234,11 +239,36 @@ def gee_sparse_jax(edges: EdgeList, labels: jax.Array, num_classes: int,
     return z
 
 
+def select_backend(edges: EdgeList, num_classes: int) -> str:
+    """Heuristic used by ``backend="auto"``.
+
+    The Pallas ELL kernel wins when the contraction lands on a real MXU and
+    the one-hot fits a few lanes; everywhere else the segment-sum path is the
+    safe O(E) default (on CPU the kernel runs in interpret mode, which is
+    strictly slower than segment-sum).
+    """
+    if jax.default_backend() == "tpu" and num_classes <= 4 * 128:
+        return "pallas"
+    return "sparse_jax"
+
+
 def gee(edges: EdgeList, labels, num_classes: int,
         opts: GEEOptions = GEEOptions(), backend: str = "sparse_jax"):
-    """Dispatch front-end.  ``sparse_jax`` is the production path."""
+    """Dispatch front-end.
+
+    Backends: ``sparse_jax`` (production default), ``pallas`` (ELL + Pallas
+    kernel), ``dense_jax`` (oracle), ``scipy`` (paper-faithful), and
+    ``python_loop`` (original-GEE reference).  ``auto`` picks via
+    ``select_backend``.
+    """
+    if backend == "auto":
+        backend = select_backend(edges, num_classes)
     if backend == "sparse_jax":
         return gee_sparse_jax(edges, jnp.asarray(labels), num_classes, opts)
+    if backend == "pallas":
+        from repro.kernels.ops import gee_pallas   # deferred: avoids a cycle
+
+        return gee_pallas(edges, jnp.asarray(labels), num_classes, opts)
     if backend == "dense_jax":
         return gee_dense_jax(edges, jnp.asarray(labels), num_classes, opts)
     e = edges.num_edges

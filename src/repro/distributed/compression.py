@@ -19,8 +19,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.compat import shard_map_nocheck
 
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -79,10 +80,9 @@ def make_compressed_allreduce(mesh: Mesh, axis_name: str = "data"):
         return mean, new_e
 
     def wrapped(grads, error):
-        fn = shard_map(allreduce, mesh=mesh,
-                       in_specs=(P(axis_name), P(axis_name)),
-                       out_specs=(P(), P(axis_name)),
-                       check_vma=False)
+        fn = shard_map_nocheck(allreduce, mesh=mesh,
+                               in_specs=(P(axis_name), P(axis_name)),
+                               out_specs=(P(), P(axis_name)))
         return fn(grads, error)
 
     return wrapped

@@ -35,8 +35,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.compat import shard_map_nocheck
 
 from repro.models.config import MoEConfig
 from repro.models.layers import truncated_normal_init
@@ -298,10 +299,9 @@ def moe_forward_ep(params: dict, x: jax.Array, moe: MoEConfig, mesh: Mesh,
         }
     aux_spec = {"load_balance_loss": P(), "router_z_loss": P(),
                 "drop_fraction": P()}
-    fn = shard_map(
+    fn = shard_map_nocheck(
         body, mesh=mesh,
         in_specs=in_specs + (shared_spec,),
-        out_specs=(P(dp if dp else None, None, None), aux_spec),
-        check_vma=False)
+        out_specs=(P(dp if dp else None, None, None), aux_spec))
     return fn(x, params["router"], params["we_gate"], params["we_up"],
               params["we_down"], shared)

@@ -193,29 +193,11 @@ class ELL:
 
 def edges_to_ell(edges: EdgeList, row_pad: int = 8,
                  max_degree: int | None = None) -> ELL:
-    """Host-side conversion edge list -> ELL.  Rows above max_degree are
-    truncated only if ``max_degree`` is given (tests never truncate)."""
-    n = edges.num_nodes
-    src = np.asarray(edges.src)[: edges.num_edges]
-    dst = np.asarray(edges.dst)[: edges.num_edges]
-    w = np.asarray(edges.weight)[: edges.num_edges]
-    keep = w != 0
-    src, dst, w = src[keep], dst[keep], w[keep]
-    counts = np.bincount(src, minlength=n)
-    dmax = int(counts.max()) if counts.size else 1
-    if max_degree is not None:
-        dmax = min(dmax, max_degree)
-    dmax = max(dmax, 1)
-    n_pad = ((n + row_pad - 1) // row_pad) * row_pad
-    cols = np.zeros((n_pad, dmax), np.int32)
-    vals = np.zeros((n_pad, dmax), np.float32)
-    # Vectorized slot assignment: sort edges by row, slot = rank within row.
-    order = np.argsort(src, kind="stable")
-    src, dst, w = src[order], dst[order], w[order]
-    indptr = np.zeros(n + 1, np.int64)
-    np.cumsum(counts, out=indptr[1:])
-    slot = np.arange(src.size, dtype=np.int64) - indptr[src]
-    keep2 = slot < dmax
-    cols[src[keep2], slot[keep2]] = dst[keep2]
-    vals[src[keep2], slot[keep2]] = w[keep2]
-    return ELL(cols=jnp.asarray(cols), vals=jnp.asarray(vals), num_nodes=n)
+    """Host-side conversion edge list -> ELL.
+
+    Back-compat shim: the packing layer lives in ``repro.graph.ell`` (which
+    also provides the degree-bucketed variant the Pallas backend uses).
+    """
+    from repro.graph.ell import edges_to_ell as _pack
+
+    return _pack(edges, row_pad=row_pad, max_degree=max_degree)

@@ -7,10 +7,20 @@ global array is rectangular; padding entries carry weight 0 (exact no-ops).
 Balance: a random permutation before splitting equalizes both edge counts and
 expected per-class mass across shards, which keeps the per-device partial
 segment-sums balanced (straggler mitigation at the data level).
+
+``shard_edges_to_ell`` extends the same strategy to the Pallas backend: each
+shard's edge subset is packed into its own ELL plane over the full node range
+(every device produces a *partial* [N_pad, K] embedding, exactly like the
+segment-sum path), with one common width so the stacked planes stay
+rectangular for shard_map.
 """
 
 from __future__ import annotations
 
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.containers import EdgeList, edge_list_from_numpy
@@ -31,3 +41,39 @@ def shard_edges(edges: EdgeList, num_shards: int, seed: int = 0,
     per = ((per + pad_multiple - 1) // pad_multiple) * pad_multiple
     total = per * num_shards
     return edge_list_from_numpy(src, dst, w, edges.num_nodes, pad_to=total)
+
+
+def shard_edges_to_ell(edges: EdgeList, num_shards: int, num_rows: int,
+                       seed: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Pack each shard's edges into an ELL plane over all ``num_rows`` rows.
+
+    Returns (cols, vals) shaped [num_shards * num_rows, width] so they shard
+    as P(axes) on dim 0 inside shard_map; ``width`` is the max per-shard row
+    degree (random edge assignment keeps it near max_degree / num_shards).
+    Empty slots have vals == 0 / cols == 0, the usual exact-no-op padding.
+    """
+    from repro.graph.ell import _group_edges_by_row
+
+    e = edges.num_edges
+    src = np.asarray(edges.src)[:e]
+    dst = np.asarray(edges.dst)[:e]
+    w = np.asarray(edges.weight)[:e]
+    rng = np.random.default_rng(seed)
+    shard_of_edge = rng.permutation(np.arange(e) % num_shards)
+
+    groups = []
+    width = 1
+    for s in range(num_shards):
+        m = shard_of_edge == s
+        sub = edge_list_from_numpy(src[m], dst[m], w[m], num_rows)
+        gs, gd, gw, counts, slot = _group_edges_by_row(sub, None)
+        groups.append((gs, gd, gw, slot))
+        width = max(width, int(counts.max()) if counts.size else 1)
+
+    cols = np.zeros((num_shards, num_rows, width), np.int32)
+    vals = np.zeros((num_shards, num_rows, width), np.float32)
+    for s, (gs, gd, gw, slot) in enumerate(groups):
+        cols[s, gs, slot] = gd
+        vals[s, gs, slot] = gw
+    return (jnp.asarray(cols.reshape(num_shards * num_rows, width)),
+            jnp.asarray(vals.reshape(num_shards * num_rows, width)))

@@ -1,5 +1,7 @@
-from repro.kernels.gee_spmm import gee_spmm
+from repro.kernels.gee_spmm import choose_block_sizes, gee_spmm
 from repro.kernels.row_norm import row_norm
-from repro.kernels.ops import gee_pallas, gee_pallas_from_ell
+from repro.kernels.ops import (gee_pallas, gee_pallas_from_bucketed,
+                               gee_pallas_from_ell)
 
-__all__ = ["gee_spmm", "row_norm", "gee_pallas", "gee_pallas_from_ell"]
+__all__ = ["gee_spmm", "choose_block_sizes", "row_norm", "gee_pallas",
+           "gee_pallas_from_bucketed", "gee_pallas_from_ell"]

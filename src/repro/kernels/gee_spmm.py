@@ -34,10 +34,77 @@ from jax.experimental import pallas as pl
 
 LANE = 128          # TPU lane width: last-dim alignment unit
 SUBLANE = 8         # f32 sublane height
+_VREG_BUDGET = 4 * 1024 * 1024   # cap for the [R, deg_sub, K] one-hot live set
 
 
 def _ceil_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def _pow2_at_least(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+# ---------------------------------------------------------------------------
+# block-size autotuning
+# ---------------------------------------------------------------------------
+#
+# Keyed on pow2-bucketed (N, max degree, K) so the cache stays tiny across a
+# sweep of graph sizes.  The table holds shapes that measured fastest on the
+# interpret-mode sweep in benchmarks/bench_gee_pallas.py; anything not listed
+# falls back to the VMEM-budget formula below.  Entries are
+# (n_bucket, deg_bucket, k_bucket) -> (block_rows, block_deg, deg_sub).
+
+_TUNED_TABLE = {
+    # small graphs: one row tile, narrow degree tiles
+    (256, 64, 4): (256, 64, 16),
+    (512, 64, 4): (256, 64, 16),
+    # SBM-sized graphs (paper's Fig. 3 grid), K <= 8
+    (1024, 128, 4): (256, 128, 16),
+    (4096, 256, 4): (256, 128, 16),
+    (16384, 512, 4): (512, 128, 16),
+    # wide-K regimes keep the one-hot intermediate small
+    (1024, 128, 128): (128, 128, 8),
+    (4096, 256, 128): (128, 128, 8),
+}
+
+
+def choose_block_sizes(n: int, max_degree: int,
+                       num_classes: int) -> tuple[int, int, int]:
+    """Heuristic (block_rows, block_deg, deg_sub) for a [n, max_degree] plane.
+
+    Cached per pow2 bucket of the key (so a sweep over many graph sizes
+    stays within a handful of cache entries); consults the measured table
+    first and falls back to a VMEM-budget formula.  The result is then
+    clamped so tiles never exceed the actual (padded) plane.
+    """
+    block_rows, block_deg, deg_sub = _choose_block_sizes_bucketed(
+        _pow2_at_least(max(n, 1)), _pow2_at_least(max(max_degree, 1)),
+        _pow2_at_least(max(num_classes, 1)))
+    block_rows = min(block_rows, _ceil_to(max(n, 1), SUBLANE))
+    block_deg = min(block_deg, _ceil_to(max(max_degree, 1), SUBLANE))
+    deg_sub = min(deg_sub, block_deg)
+    return block_rows, block_deg, deg_sub
+
+
+@functools.lru_cache(maxsize=512)
+def _choose_block_sizes_bucketed(n_b: int, d_b: int,
+                                 k_b: int) -> tuple[int, int, int]:
+    """Table lookup / VMEM-budget formula on pow2-bucketed (N, D, K): row
+    tiles cap at 256, degree tiles stop at one LANE, and deg_sub is sized so
+    the [rows, deg_sub, K] one-hot intermediate stays under _VREG_BUDGET."""
+    hit = _TUNED_TABLE.get((n_b, d_b, k_b))
+    if hit is not None:
+        return hit
+    block_rows = min(256, _ceil_to(n_b, SUBLANE))
+    block_deg = min(LANE, _ceil_to(d_b, SUBLANE))
+    k_pad = _ceil_to(k_b, LANE)
+    deg_sub = max(_VREG_BUDGET // (block_rows * k_pad * 4), 1)
+    deg_sub = min(_pow2_at_least(deg_sub + 1) // 2, block_deg, 32)
+    return block_rows, block_deg, deg_sub
 
 
 def _gee_spmm_kernel(ylab_ref, contrib_ref, out_ref, *, num_classes_pad: int,
@@ -56,10 +123,11 @@ def _gee_spmm_kernel(ylab_ref, contrib_ref, out_ref, *, num_classes_pad: int,
     acc = jnp.zeros((rows, num_classes_pad), jnp.float32)
     # Sub-chunk the degree axis so the one-hot intermediate stays VREG-sized.
     for d0 in range(0, deg, deg_sub):
-        yl = ylab[:, d0:d0 + deg_sub]                          # [R, ds]
-        cb = contrib[:, d0:d0 + deg_sub]                       # [R, ds]
+        ds = min(deg_sub, deg - d0)          # final chunk may be ragged
+        yl = ylab[:, d0:d0 + ds]                               # [R, ds]
+        cb = contrib[:, d0:d0 + ds]                            # [R, ds]
         iota = jax.lax.broadcasted_iota(
-            jnp.int32, (rows, deg_sub, num_classes_pad), 2)
+            jnp.int32, (rows, ds, num_classes_pad), 2)
         onehot = (yl[:, :, None] == iota).astype(jnp.float32)  # [R, ds, K]
         # Batched matvec over rows: contract the degree axis on the MXU.
         acc = acc + jax.lax.dot_general(
@@ -69,17 +137,32 @@ def _gee_spmm_kernel(ylab_ref, contrib_ref, out_ref, *, num_classes_pad: int,
     out_ref[...] += acc
 
 
-@functools.partial(jax.jit, static_argnames=("num_classes", "block_rows",
-                                             "block_deg", "deg_sub",
-                                             "interpret"))
 def gee_spmm(ylab: jax.Array, contrib: jax.Array, num_classes: int,
-             block_rows: int = 256, block_deg: int = 128, deg_sub: int = 8,
-             interpret: bool = True) -> jax.Array:
+             block_rows: int | None = 256, block_deg: int | None = 128,
+             deg_sub: int | None = 8, interpret: bool = True) -> jax.Array:
     """ELL GEE contraction.  ylab [N, D] int32 (-1 pad), contrib [N, D] f32.
 
     Returns [N, num_classes] f32.  Padding slots (ylab == -1) match no class
     and contribute exactly 0, so padded and unpadded inputs agree bitwise.
+    Pass ``None`` for any block size to let ``choose_block_sizes`` pick it
+    from the (N, max degree, K) heuristic table.
     """
+    n, d = ylab.shape
+    if block_rows is None or block_deg is None or deg_sub is None:
+        auto = choose_block_sizes(n, d, num_classes)
+        block_rows = auto[0] if block_rows is None else block_rows
+        block_deg = auto[1] if block_deg is None else block_deg
+        deg_sub = auto[2] if deg_sub is None else deg_sub
+    return _gee_spmm_jit(ylab, contrib, num_classes, block_rows, block_deg,
+                         deg_sub, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "block_rows",
+                                             "block_deg", "deg_sub",
+                                             "interpret"))
+def _gee_spmm_jit(ylab: jax.Array, contrib: jax.Array, num_classes: int,
+                  block_rows: int, block_deg: int, deg_sub: int,
+                  interpret: bool) -> jax.Array:
     n, d = ylab.shape
     k_pad = _ceil_to(max(num_classes, 1), LANE)
     n_pad = _ceil_to(max(n, 1), block_rows)

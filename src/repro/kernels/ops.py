@@ -5,6 +5,15 @@ exactly (same options, same -1-label convention) but routes the contraction
 through the ``gee_spmm`` kernel and the correlation step through ``row_norm``.
 On CPU the kernels run in interpret mode (Python evaluation of the kernel
 body); on TPU the same code compiles to Mosaic.
+
+Two packing strategies feed the kernel:
+
+  * flat (``bucketed=False``): one [N_pad, D_max] plane.  Simple, but a
+    power-law hub row pads everything to its degree.
+  * bucketed (``bucketed=True``, the default): rows grouped into geometric
+    degree buckets (see ``repro.graph.ell``).  Each bucket gets its own
+    kernel launch with block sizes from the (N, max-degree, K) autotuner,
+    and partial outputs are scattered back by row id.
 """
 
 from __future__ import annotations
@@ -12,9 +21,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.gee import GEEOptions, class_counts
-from repro.graph.containers import ELL, EdgeList, add_self_loops, edges_to_ell
-from repro.kernels.gee_spmm import gee_spmm
+from repro.core.gee import GEEOptions, class_weight_inv
+from repro.graph.containers import ELL, EdgeList, add_self_loops
+from repro.graph.ell import (BucketedELL, edges_to_bucketed_ell, edges_to_ell,
+                             ell_planes)
+from repro.kernels.gee_spmm import choose_block_sizes, gee_spmm
 from repro.kernels.row_norm import row_norm
 
 
@@ -24,9 +35,10 @@ def _interpret_default() -> bool:
 
 def gee_pallas_from_ell(ell: ELL, labels: jax.Array, num_classes: int,
                         opts: GEEOptions = GEEOptions(), *,
-                        block_rows: int = 256, block_deg: int = 128,
+                        block_rows: int | None = None,
+                        block_deg: int | None = None,
                         interpret: bool | None = None) -> jax.Array:
-    """GEE from a pre-built ELL tiling (device-side math only)."""
+    """GEE from a pre-built flat ELL tiling (device-side math only)."""
     if interpret is None:
         interpret = _interpret_default()
     labels = jnp.asarray(labels, jnp.int32)
@@ -39,27 +51,67 @@ def gee_pallas_from_ell(ell: ELL, labels: jax.Array, num_classes: int,
         deg_dst = dinv[jnp.clip(cols, 0, n - 1)]
         vals = vals * dinv[:vals.shape[0], None] * deg_dst
 
-    nk = class_counts(labels, num_classes)
-    winv = jnp.where(nk > 0, 1.0 / jnp.maximum(nk, 1.0), 0.0)
-
-    valid = vals != 0
-    ylab = jnp.where(valid, labels[jnp.clip(cols, 0, n - 1)], -1)
-    ylab = jnp.where(ylab >= 0, ylab, -1)
-    contrib = jnp.where(ylab >= 0,
-                        vals * winv[jnp.maximum(ylab, 0)], 0.0)
-
+    ylab, contrib = ell_planes(cols, vals, labels,
+                               class_weight_inv(labels, num_classes))
     z = gee_spmm(ylab, contrib, num_classes, block_rows=block_rows,
-                 block_deg=block_deg, interpret=interpret)[:n]
+                 block_deg=block_deg, deg_sub=None, interpret=interpret)[:n]
+    if opts.correlation:
+        z = row_norm(z, interpret=interpret)
+    return z
+
+
+def gee_pallas_from_bucketed(bell: BucketedELL, labels: jax.Array,
+                             num_classes: int,
+                             opts: GEEOptions = GEEOptions(), *,
+                             block_rows: int | None = None,
+                             block_deg: int | None = None,
+                             interpret: bool | None = None) -> jax.Array:
+    """GEE from a degree-bucketed ELL tiling: one kernel launch per bucket,
+    partial outputs scattered into the [N+1]-row accumulator (row N is the
+    dump row for bucket padding).  Explicit block sizes override the
+    autotuner for every bucket; by default each bucket is tuned on its own
+    (rows, width, K)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    labels = jnp.asarray(labels, jnp.int32)
+    n = bell.num_nodes
+    winv = class_weight_inv(labels, num_classes)
+
+    dinv = None
+    if opts.laplacian:
+        # degree = total out-weight per node, assembled across buckets
+        deg = jnp.zeros((n + 1,), jnp.float32)
+        for b in bell.buckets:
+            deg = deg.at[b.row_ids].add(jnp.sum(b.vals, axis=1))
+        deg = deg[:n]
+        dinv = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
+
+    z = jnp.zeros((n + 1, num_classes), jnp.float32)
+    for b in bell.buckets:
+        vals = b.vals
+        if dinv is not None:
+            safe_rows = jnp.minimum(b.row_ids, n - 1)
+            vals = vals * dinv[safe_rows][:, None] \
+                        * dinv[jnp.clip(b.cols, 0, n - 1)]
+        ylab, contrib = ell_planes(b.cols, vals, labels, winv)
+        br, bd, _ = choose_block_sizes(int(b.cols.shape[0]), b.width,
+                                       num_classes)
+        out = gee_spmm(ylab, contrib, num_classes,
+                       block_rows=block_rows if block_rows is not None else br,
+                       block_deg=block_deg if block_deg is not None else bd,
+                       deg_sub=None, interpret=interpret)
+        z = z.at[b.row_ids].add(out)
+    z = z[:n]
     if opts.correlation:
         z = row_norm(z, interpret=interpret)
     return z
 
 
 def gee_pallas(edges: EdgeList, labels, num_classes: int,
-               opts: GEEOptions = GEEOptions(), *,
-               block_rows: int = 256, block_deg: int = 128,
+               opts: GEEOptions = GEEOptions(), *, bucketed: bool = True,
+               block_rows: int | None = None, block_deg: int | None = None,
                interpret: bool | None = None) -> jax.Array:
-    """Full pipeline: edge list -> ELL (host) -> Pallas GEE.
+    """Full pipeline: edge list -> (bucketed) ELL (host) -> Pallas GEE.
 
     Laplacian caveat: ELL rows hold *out*-edges, so the row-sum degree equals
     the symmetrized graph degree (our edge lists are stored directed with
@@ -68,7 +120,13 @@ def gee_pallas(edges: EdgeList, labels, num_classes: int,
     labels = jnp.asarray(labels, jnp.int32)
     if opts.diag_aug:
         edges = add_self_loops(edges)
-    ell = edges_to_ell(edges, row_pad=block_rows)
+    if bucketed:
+        bell = edges_to_bucketed_ell(edges)
+        return gee_pallas_from_bucketed(bell, labels, num_classes, opts,
+                                        block_rows=block_rows,
+                                        block_deg=block_deg,
+                                        interpret=interpret)
+    ell = edges_to_ell(edges)
     return gee_pallas_from_ell(ell, labels, num_classes, opts,
                                block_rows=block_rows, block_deg=block_deg,
                                interpret=interpret)

@@ -8,15 +8,25 @@ and benchmarks keep the single real CPU device).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.x; older versions have implicit Auto
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds the 2-pod outer axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh_for(devices: int, model_parallel: int = 1, pods: int = 1):
@@ -24,8 +34,6 @@ def make_mesh_for(devices: int, model_parallel: int = 1, pods: int = 1):
     data = devices // (model_parallel * pods)
     assert data * model_parallel * pods == devices
     if pods > 1:
-        return jax.make_mesh((pods, data, model_parallel),
-                             ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model_parallel), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return _make_mesh((pods, data, model_parallel),
+                          ("pod", "data", "model"))
+    return _make_mesh((data, model_parallel), ("data", "model"))

@@ -51,18 +51,17 @@ def test_wire_bytes_accounting():
 def test_compressed_psum_matches_mean():
     code = """
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+from repro.distributed.compat import shard_map_nocheck
 from repro.distributed.compression import compressed_psum_mean
-mesh = jax.make_mesh((4,), ('data',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((4,), ('data',))
 x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 64)),
                 jnp.float32)
 def body(xs, err):
     return compressed_psum_mean(xs[0], 'data', err[0])
-mean, new_err = shard_map(body, mesh=mesh, in_specs=(P('data'), P('data')),
-                          out_specs=(P(), P('data')), check_vma=False)(
-    x, jnp.zeros_like(x))
+mean, new_err = shard_map_nocheck(
+    body, mesh=mesh, in_specs=(P('data'), P('data')),
+    out_specs=(P(), P('data')))(x, jnp.zeros_like(x))
 true = x.mean(0)
 rel = float(jnp.abs(mean - true).max() / (jnp.abs(true).max() + 1e-9))
 assert rel < 0.05, rel   # int8 quantization noise only

@@ -1,0 +1,137 @@
+"""ELL packing layer: flat and degree-bucketed packers, kernel planes,
+padding accounting, and the per-shard packer used by distributed GEE."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graph.containers import (edge_list_from_numpy, symmetrize,
+                                    to_dense)
+from repro.graph.ell import (bucket_widths, edges_to_bucketed_ell,
+                             edges_to_ell, ell_planes, ell_stats)
+from repro.graph.partition import shard_edges_to_ell
+
+
+def _star_graph(n=200):
+    """Power-law-ish worst case for flat ELL: one hub of degree n-1."""
+    src = np.zeros(n - 1, np.int32)
+    dst = np.arange(1, n, dtype=np.int32)
+    return symmetrize(edge_list_from_numpy(src, dst, None, n))
+
+
+def _ell_to_dense(cols, vals, n):
+    a = np.zeros((n, n), np.float32)
+    cols, vals = np.asarray(cols), np.asarray(vals)
+    for r in range(min(cols.shape[0], n)):
+        for s in range(cols.shape[1]):
+            if vals[r, s] != 0:
+                a[r, cols[r, s]] += vals[r, s]
+    return a
+
+
+def test_flat_ell_round_trip(sbm_small):
+    s = sbm_small
+    ell = edges_to_ell(s.edges)
+    a = _ell_to_dense(ell.cols, ell.vals, s.edges.num_nodes)
+    np.testing.assert_allclose(a, np.asarray(to_dense(s.edges)), atol=1e-6)
+
+
+def test_bucketed_ell_round_trip(sbm_small):
+    s = sbm_small
+    bell = edges_to_bucketed_ell(s.edges)
+    n = s.edges.num_nodes
+    a = np.zeros((n, n), np.float32)
+    seen_rows = set()
+    for b in bell.buckets:
+        ids = np.asarray(b.row_ids)[: b.num_rows]
+        assert not (set(ids) & seen_rows), "row in two buckets"
+        seen_rows.update(ids)
+        cols, vals = np.asarray(b.cols), np.asarray(b.vals)
+        for i, r in enumerate(ids):
+            for s_ in range(b.width):
+                if vals[i, s_] != 0:
+                    a[r, cols[i, s_]] += vals[i, s_]
+    np.testing.assert_allclose(a, np.asarray(to_dense(s.edges)), atol=1e-6)
+
+
+def test_bucket_widths_geometric():
+    assert bucket_widths(1) == (8,)
+    assert bucket_widths(8) == (8,)
+    assert bucket_widths(9) == (8, 16)
+    assert bucket_widths(100) == (8, 16, 32, 64, 128)
+
+
+def test_bucketed_rows_fit_their_bucket(sbm_small):
+    bell = edges_to_bucketed_ell(sbm_small.edges)
+    widths = sorted(b.width for b in bell.buckets)
+    for b in bell.buckets:
+        deg = np.asarray((b.vals != 0).sum(axis=1))[: b.num_rows]
+        assert deg.max() <= b.width
+        # rows are in the *narrowest* bucket that fits
+        narrower = [w for w in widths if w < b.width]
+        if narrower:
+            assert deg.min() > narrower[-1]
+
+
+def test_bucketing_beats_flat_on_power_law():
+    stats = ell_stats(_star_graph(200))
+    # flat packs every row to the hub degree (~100x waste here); buckets pad
+    # each row to max(2*deg, 8), so overhead is bounded by the 8-slot base
+    # width even though most rows have degree 1
+    assert stats["bucketed_slots"] < stats["flat_slots"] / 10
+    assert stats["bucketed_overhead"] <= 8 + 2
+
+
+def test_padding_waste_bound(sbm_medium):
+    """Geometric widths: stored slots <= 2E + row-tile padding slack."""
+    stats = ell_stats(sbm_medium.edges)
+    slack = stats["num_buckets"] * 8 * stats["max_degree"]
+    assert stats["bucketed_slots"] <= 2 * stats["num_edges"] + slack
+
+
+def test_flat_truncation():
+    edges = _star_graph(50)
+    ell = edges_to_ell(edges, max_degree=4)
+    assert ell.cols.shape[1] == 4
+    assert int(np.asarray((ell.vals != 0).sum())) <= 50 + 3  # hub truncated
+
+
+def test_ell_planes_match_manual():
+    cols = jnp.asarray([[1, 2, 0], [0, 0, 0]], jnp.int32)
+    vals = jnp.asarray([[1.0, 2.0, 0.0], [3.0, 0.0, 0.0]], jnp.float32)
+    labels = jnp.asarray([0, 1, -1], jnp.int32)
+    winv = jnp.asarray([0.5, 1.0], jnp.float32)
+    ylab, contrib = ell_planes(cols, vals, labels, winv)
+    # slot (0,0): neighbor 1 has class 1 -> contrib 1.0 * 1.0
+    # slot (0,1): neighbor 2 unlabeled -> padding
+    # slot (0,2): vals == 0 -> padding even though cols == 0 (class 0)
+    np.testing.assert_array_equal(np.asarray(ylab),
+                                  [[1, -1, -1], [0, -1, -1]])
+    np.testing.assert_allclose(np.asarray(contrib),
+                               [[1.0, 0.0, 0.0], [1.5, 0.0, 0.0]])
+
+
+def test_empty_graph_ok():
+    edges = edge_list_from_numpy(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                                 None, 5)
+    ell = edges_to_ell(edges)
+    assert ell.cols.shape[1] == 1
+    bell = edges_to_bucketed_ell(edges)
+    assert bell.buckets == ()
+
+
+def test_shard_ell_union_reconstructs(sbm_small):
+    s = sbm_small
+    n = s.edges.num_nodes
+    cols, vals = shard_edges_to_ell(s.edges, 4, num_rows=n)
+    a = np.zeros((n, n), np.float32)
+    for p in range(4):
+        a += _ell_to_dense(cols[p * n:(p + 1) * n], vals[p * n:(p + 1) * n], n)
+    np.testing.assert_allclose(a, np.asarray(to_dense(s.edges)), atol=1e-6)
+
+
+def test_shard_ell_width_shrinks_with_shards(sbm_small):
+    s = sbm_small
+    n = s.edges.num_nodes
+    cols1, _ = shard_edges_to_ell(s.edges, 1, num_rows=n)
+    cols8, _ = shard_edges_to_ell(s.edges, 8, num_rows=n)
+    assert cols8.shape[1] < cols1.shape[1]
