@@ -1,0 +1,172 @@
+"""Incremental-update latency vs graph size (the streaming subsystem's claim).
+
+For graphs with a *fixed mean degree* and node counts spanning >= 10x (so
+edge counts span >= 10x), applies fixed-size edge-delta batches through
+``IncrementalGEE`` and times (a) the state update + cached-Z row patch and
+(b) a from-scratch jitted ``gee_sparse_jax`` recompute on the same graph.
+
+The claim under test: update latency is O(|delta| + affected-row edges) --
+flat across sizes (< 2x spread) -- while the recompute is O(E) and grows
+~linearly.  Label-flip batches are timed separately: they additionally pay
+one vectorized O(N*K) cached-Z refresh (the 1/n_k rescale), so they are
+reported but excluded from the flatness gate.
+
+Each run writes BENCH_gee_incremental.json; CI uploads it as a per-commit
+artifact alongside the other benchmark JSONs.
+
+  PYTHONPATH=src python benchmarks/bench_gee_incremental.py \
+      [--nodes 2000,6000,20000] [--deg 8] [--delta 64] [--rounds 20]
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gee import GEEOptions, gee_sparse_jax
+from repro.core.incremental import IncrementalGEE
+from repro.graph.containers import edge_list_from_numpy, symmetrize
+from repro.graph.delta import (edge_delta_from_numpy, label_delta_from_numpy,
+                               symmetrize_delta)
+
+NODES = (2_000, 8_000, 25_000)
+OPTS = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+K = 5
+
+
+def _random_pairs(rng, n, count):
+    src = rng.integers(0, n, count).astype(np.int32)
+    dst = (src + 1 + rng.integers(0, n - 1, count)).astype(np.int32) % n
+    return src, dst
+
+
+def run(nodes=NODES, deg=8, delta=64, rounds=20, seed=0):
+    rows = []
+    for n in nodes:
+        rng = np.random.default_rng(seed)
+        pairs = n * deg // 2
+        src, dst = _random_pairs(rng, n, pairs)
+        labels = rng.integers(0, K, n).astype(np.int32)
+        edges = symmetrize(edge_list_from_numpy(src, dst, None, n))
+
+        t0 = time.perf_counter()
+        inc = IncrementalGEE.from_graph(edges, labels, K, OPTS)
+        inc.embedding()
+        t_init = time.perf_counter() - t0
+
+        # fixed-size edge-delta batches (undirected inserts); median over
+        # rounds with GC parked, so one collection pause cannot masquerade
+        # as an O(E) dependence
+        batches = [symmetrize_delta(edge_delta_from_numpy(
+            *_random_pairs(rng, n, delta))) for _ in range(rounds + 1)]
+        inc.apply_edges(batches[0])          # warmup round
+        inc.embedding()
+        edge_ts = []
+        gc.disable()
+        for batch in batches[1:]:
+            t0 = time.perf_counter()
+            inc.apply_edges(batch)
+            inc.embedding()
+            edge_ts.append(time.perf_counter() - t0)
+        gc.enable()
+
+        # label-flip batches (pay the extra O(N*K) cached-Z refresh)
+        label_ts = []
+        gc.disable()
+        for _ in range(rounds):
+            nd = rng.integers(0, n, delta)
+            nl = rng.integers(0, K, delta).astype(np.int32)
+            t0 = time.perf_counter()
+            inc.apply_labels(label_delta_from_numpy(nd, nl))
+            inc.embedding()
+            label_ts.append(time.perf_counter() - t0)
+        gc.enable()
+
+        # from-scratch recompute on the mutated graph (post-warmup, blocked)
+        cur = inc.to_edge_list()
+        y = jnp.asarray(inc.labels)
+        jax.block_until_ready(gee_sparse_jax(cur, y, K, OPTS))
+        rc = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(gee_sparse_jax(cur, y, K, OPTS))
+            rc.append(time.perf_counter() - t0)
+        t_rec = min(rc)
+
+        err = float(np.abs(inc.embedding()
+                           - np.asarray(gee_sparse_jax(cur, y, K,
+                                                       OPTS))).max())
+        assert err <= 1e-5, f"incremental diverged from sparse_jax: {err}"
+
+        row = {
+            "nodes": n,
+            "edges": cur.num_edges,
+            "delta_size": delta,
+            "t_init": t_init,
+            "t_update_edge_median": float(np.median(edge_ts)),
+            "t_update_edge_mean": float(np.mean(edge_ts)),
+            "t_update_edge_min": float(np.min(edge_ts)),
+            "t_update_label_median": float(np.median(label_ts)),
+            "t_recompute": t_rec,
+            "max_abs_err": err,
+        }
+        rows.append(row)
+        print(f"N={n:7d} E={row['edges']:9d}  init={t_init*1e3:8.1f}ms  "
+              f"edge-update={row['t_update_edge_median']*1e3:7.2f}ms  "
+              f"label-update={row['t_update_label_median']*1e3:7.2f}ms  "
+              f"recompute={t_rec*1e3:7.2f}ms  err={err:.1e}")
+
+    spread = (max(r["t_update_edge_median"] for r in rows)
+              / max(min(r["t_update_edge_median"] for r in rows), 1e-12))
+    e_span = max(r["edges"] for r in rows) / min(r["edges"] for r in rows)
+    print(f"edge span {e_span:.1f}x, edge-update latency spread "
+          f"{spread:.2f}x (flat means < 2x)")
+    return rows, spread, e_span
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=str, default=",".join(map(str, NODES)),
+                    help="comma-separated node counts (fixed mean degree, so "
+                         "edge counts scale with nodes)")
+    ap.add_argument("--deg", type=int, default=8, help="mean degree")
+    ap.add_argument("--delta", type=int, default=64,
+                    help="undirected edge inserts / label flips per batch")
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=str, default="BENCH_gee_incremental.json",
+                    help="output JSON path ('' disables)")
+    ap.add_argument("--max-spread", type=float, default=0.0,
+                    help="fail if the edge-update latency spread exceeds "
+                         "this factor (0 disables; wall-clock gating is for "
+                         "local/perf runs -- CI only records the JSON, since "
+                         "shared runners are too noisy to gate on)")
+    args = ap.parse_args(argv)
+    nodes = tuple(int(x) for x in args.nodes.split(",") if x)
+    rows, spread, e_span = run(nodes, args.deg, args.delta, args.rounds,
+                               args.seed)
+    if args.json:
+        payload = {"benchmark": "gee_incremental",
+                   "backend": jax.default_backend(),
+                   "opts": OPTS.tag(), "edge_span": e_span,
+                   "edge_update_spread": spread, "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+    if args.max_spread and spread > args.max_spread:
+        raise SystemExit(
+            f"edge-update latency spread {spread:.2f}x exceeds "
+            f"--max-spread {args.max_spread}: the update path is no longer "
+            f"independent of total E")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

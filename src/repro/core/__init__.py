@@ -1,8 +1,9 @@
 from repro.core.gee import (ALL_OPTION_SETTINGS, GEEOptions, gee,
                             gee_dense_jax, gee_python_loop, gee_scipy,
                             gee_sparse_jax)
+from repro.core.incremental import IncrementalGEE
 
 __all__ = [
-    "ALL_OPTION_SETTINGS", "GEEOptions", "gee", "gee_dense_jax",
-    "gee_python_loop", "gee_scipy", "gee_sparse_jax",
+    "ALL_OPTION_SETTINGS", "GEEOptions", "IncrementalGEE", "gee",
+    "gee_dense_jax", "gee_python_loop", "gee_scipy", "gee_sparse_jax",
 ]

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gee import GEEOptions, gee, class_counts
+from repro.core.incremental import Delta, IncrementalGEE
 from repro.graph.containers import EdgeList, edge_list_from_numpy, symmetrize
 
 
@@ -40,6 +41,8 @@ class GEEEmbedder:
     _edges: Optional[EdgeList] = dataclasses.field(default=None, repr=False)
     _labels: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
     _z: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
+    _inc: Optional[IncrementalGEE] = dataclasses.field(default=None,
+                                                       repr=False)
 
     # -- construction helpers ------------------------------------------------
     @staticmethod
@@ -61,11 +64,49 @@ class GEEEmbedder:
         self._edges = edges
         self._labels = jnp.asarray(labels, jnp.int32)
         self._z = None
+        self._inc = None
         return self
+
+    def partial_fit(self, delta: Delta) -> "GEEEmbedder":
+        """Apply an ``EdgeDelta`` / ``LabelDelta`` (or a sequence of them)
+        in O(|delta| + affected-row edges) instead of refitting O(E).
+
+        The first call promotes the fitted graph into an ``IncrementalGEE``
+        accumulator; from then on ``transform`` serves from its cached Z
+        (numerically the ``sparse_jax`` contract, whatever ``backend`` says).
+        """
+        if self._edges is None:
+            raise RuntimeError("call fit() first")
+        if self._inc is None:
+            self._inc = IncrementalGEE.from_graph(
+                self._edges, self._labels, self.num_classes, self.options)
+        self._inc.apply(delta)
+        self._labels = jnp.asarray(self._inc.labels)
+        self._z = None
+        return self
+
+    @property
+    def incremental(self) -> Optional[IncrementalGEE]:
+        """The live streaming state (None until ``partial_fit`` is called)."""
+        return self._inc
+
+    def current_edges(self) -> EdgeList:
+        """The graph actually embedded: the mutated one once streaming."""
+        if self._inc is not None:
+            return self._inc.to_edge_list()
+        if self._edges is None:
+            raise RuntimeError("call fit() first")
+        return self._edges
 
     def transform(self) -> jax.Array:
         if self._edges is None:
             raise RuntimeError("call fit() first")
+        if self._inc is not None:
+            # Re-upload host Z only when rows are actually stale, so repeat
+            # reads between deltas serve the cached device copy for free.
+            if self._z is None or self._inc.num_pending_rows:
+                self._z = jnp.asarray(self._inc.embedding())
+            return self._z
         if self._z is None:
             self._z = self._compute()
         return self._z

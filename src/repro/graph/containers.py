@@ -99,30 +99,52 @@ def symmetrize(edges: EdgeList) -> EdgeList:
     """Turn a one-entry-per-undirected-edge list into a directed list.
 
     Self loops are kept single.  Padding entries stay padding (weight 0).
+
+    The reversed copies of the *valid* non-loop edges are packed directly
+    after the valid prefix (before any padding), and ``num_edges`` is exact:
+    2E minus one per self loop.  This matters for padded inputs
+    (``pad_to`` > E): consumers that slice the valid prefix
+    (``gee(backend="scipy"/"python_loop")``, CSR/ELL conversion, sharding)
+    would otherwise read E real entries plus padding and silently drop the
+    entire reversed half.  Host-side (numpy) by construction -- this is a
+    build-time transform, never called under jit.
     """
-    src, dst, w = edges.src, edges.dst, edges.weight
-    loop = src == dst
-    # Reverse copies of non-loop edges; loops/padding contribute weight 0.
-    rw = jnp.where(loop, 0.0, w)
+    e = edges.num_edges
+    src = np.asarray(edges.src)
+    dst = np.asarray(edges.dst)
+    w = np.asarray(edges.weight)
+    vsrc, vdst, vw = src[:e], dst[:e], w[:e]
+    nonloop = vsrc != vdst
+    out_src = np.concatenate([vsrc, vdst[nonloop], src[e:]])
+    out_dst = np.concatenate([vdst, vsrc[nonloop], dst[e:]])
+    out_w = np.concatenate([vw, vw[nonloop], w[e:]])
     return EdgeList(
-        src=jnp.concatenate([src, dst]),
-        dst=jnp.concatenate([dst, src]),
-        weight=jnp.concatenate([w, rw]),
+        src=jnp.asarray(out_src),
+        dst=jnp.asarray(out_dst),
+        weight=jnp.asarray(out_w),
         num_nodes=edges.num_nodes,
-        num_edges=2 * edges.num_edges,  # upper bound; loops counted twice-as-0
+        num_edges=e + int(nonloop.sum()),
     )
 
 
 def add_self_loops(edges: EdgeList, value: float = 1.0) -> EdgeList:
-    """Diagonal augmentation: A + I as an edge-list concatenation."""
+    """Diagonal augmentation: A + I as an edge-list concatenation.
+
+    The loop entries are spliced in directly after the valid prefix (not
+    after any padding), so consumers that slice ``[:num_edges]`` (ELL/CSR
+    packing, host backends) see them.  All slice points are static, so this
+    stays jit-traceable -- it is called inside ``gee_sparse_jax``.
+    """
     n = edges.num_nodes
+    e = edges.num_edges
     ids = jnp.arange(n, dtype=jnp.int32)
+    loops_w = jnp.full((n,), value, jnp.float32)
     return EdgeList(
-        src=jnp.concatenate([edges.src, ids]),
-        dst=jnp.concatenate([edges.dst, ids]),
-        weight=jnp.concatenate([edges.weight, jnp.full((n,), value, jnp.float32)]),
+        src=jnp.concatenate([edges.src[:e], ids, edges.src[e:]]),
+        dst=jnp.concatenate([edges.dst[:e], ids, edges.dst[e:]]),
+        weight=jnp.concatenate([edges.weight[:e], loops_w, edges.weight[e:]]),
         num_nodes=n,
-        num_edges=edges.num_edges + n,
+        num_edges=e + n,
     )
 
 

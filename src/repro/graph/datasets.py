@@ -66,9 +66,12 @@ def synth_like(spec: DatasetSpec, seed: int = 0,
     p = w / w.sum()
     src = rng.choice(n, size=e, p=p).astype(np.int32)
     dst = rng.choice(n, size=e, p=p).astype(np.int32)
-    # Drop self loops by rerolling cheaply (loop fraction is tiny).
+    # Drop self loops by rerolling cheaply (loop fraction is tiny).  The
+    # reroll offsets from *src* by 1..n-1, so the new endpoint can never be
+    # src again (offsetting from the old dst could land back on src).
     loops = src == dst
-    dst[loops] = (dst[loops] + 1 + rng.integers(0, n - 1, loops.sum())) % n
+    dst[loops] = (src[loops] + 1 + rng.integers(0, n - 1, loops.sum())) % n
+    assert not np.any(src == dst), "self loops survived the reroll"
     s = np.concatenate([src, dst])
     d = np.concatenate([dst, src])
     edges = edge_list_from_numpy(s, d, None, n, pad_to=pad_to)

@@ -1,0 +1,194 @@
+"""Static-shape delta batches for streaming graph updates.
+
+The streaming path mirrors the batch path's padding discipline: a delta batch
+is a fixed-size, padded container (a registered pytree with static
+``num_deltas``), so a jitted consumer sees one shape per batch-size bucket
+and padding slots are exact no-ops.  Host-side appliers (``IncrementalGEE``)
+slice the valid prefix instead.
+
+Two delta kinds cover every GEE input mutation:
+
+* ``EdgeDelta``   -- weighted edge increments.  ``weight > 0`` inserts or
+  up-weights the directed edge (src, dst); ``weight < 0`` down-weights it
+  (removal = the negated current weight); ``weight == 0`` marks padding.
+  Undirected streams store both directions, exactly like ``EdgeList`` --
+  ``symmetrize_delta`` converts.
+* ``LabelDelta``  -- label reassignments ``y[node] <- new_label`` (-1 makes a
+  node unknown again).  Padding slots carry ``node == -1``.
+
+``coalesce_edge_deltas`` / ``coalesce_label_deltas`` merge a backlog of
+batches into one minimal batch (sum duplicate (src, dst) increments; last
+write wins per node) -- the serving queue uses them so a burst of updates
+costs one state update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeDelta:
+    """Padded batch of directed weighted-edge increments.
+
+    Attributes:
+      src:     [D_pad] int32 source node ids (0 in padding slots).
+      dst:     [D_pad] int32 destination node ids (0 in padding slots).
+      weight:  [D_pad] float32 weight increments (0 == padding/no-op).
+      num_deltas: static int, number of valid entries.
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    weight: jax.Array
+    num_deltas: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def padded_size(self) -> int:
+        return int(self.src.shape[0])
+
+    def with_padding(self, multiple: int) -> "EdgeDelta":
+        """Pad so D_pad is a multiple of ``multiple`` (shape-bucket friendly)."""
+        d = self.padded_size
+        target = ((d + multiple - 1) // multiple) * multiple
+        if target == d:
+            return self
+        pad = target - d
+        return EdgeDelta(
+            src=jnp.concatenate([self.src, jnp.zeros((pad,), jnp.int32)]),
+            dst=jnp.concatenate([self.dst, jnp.zeros((pad,), jnp.int32)]),
+            weight=jnp.concatenate([self.weight, jnp.zeros((pad,), jnp.float32)]),
+            num_deltas=self.num_deltas,
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LabelDelta:
+    """Padded batch of label reassignments.
+
+    Attributes:
+      node:      [D_pad] int32 node ids (-1 in padding slots).
+      new_label: [D_pad] int32 new labels, -1 = unknown (0 in padding slots).
+      num_deltas: static int, number of valid entries.
+    """
+
+    node: jax.Array
+    new_label: jax.Array
+    num_deltas: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def padded_size(self) -> int:
+        return int(self.node.shape[0])
+
+    def with_padding(self, multiple: int) -> "LabelDelta":
+        d = self.padded_size
+        target = ((d + multiple - 1) // multiple) * multiple
+        if target == d:
+            return self
+        pad = target - d
+        return LabelDelta(
+            node=jnp.concatenate([self.node, jnp.full((pad,), -1, jnp.int32)]),
+            new_label=jnp.concatenate([self.new_label,
+                                       jnp.zeros((pad,), jnp.int32)]),
+            num_deltas=self.num_deltas,
+        )
+
+
+def edge_delta_from_numpy(src, dst, weight=None,
+                          pad_to: int | None = None) -> EdgeDelta:
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    if weight is None:
+        weight = np.ones(src.shape, np.float32)
+    weight = np.asarray(weight, np.float32)
+    d = src.shape[0]
+    size = d if pad_to is None else max(pad_to, d)
+    s = np.zeros((size,), np.int32)
+    t = np.zeros((size,), np.int32)
+    w = np.zeros((size,), np.float32)
+    s[:d], t[:d], w[:d] = src, dst, weight
+    return EdgeDelta(src=jnp.asarray(s), dst=jnp.asarray(t),
+                     weight=jnp.asarray(w), num_deltas=int(d))
+
+
+def label_delta_from_numpy(node, new_label,
+                           pad_to: int | None = None) -> LabelDelta:
+    node = np.asarray(node, np.int32)
+    new_label = np.asarray(new_label, np.int32)
+    d = node.shape[0]
+    size = d if pad_to is None else max(pad_to, d)
+    nd = np.full((size,), -1, np.int32)
+    lb = np.zeros((size,), np.int32)
+    nd[:d], lb[:d] = node, new_label
+    return LabelDelta(node=jnp.asarray(nd), new_label=jnp.asarray(lb),
+                      num_deltas=int(d))
+
+
+def symmetrize_delta(delta: EdgeDelta) -> EdgeDelta:
+    """One-entry-per-undirected-increment -> directed, as ``symmetrize``.
+
+    Self loops stay single; the reversed valid entries are packed adjacent
+    to the valid prefix with an exact ``num_deltas``.
+    """
+    d = delta.num_deltas
+    src = np.asarray(delta.src)
+    dst = np.asarray(delta.dst)
+    w = np.asarray(delta.weight)
+    vsrc, vdst, vw = src[:d], dst[:d], w[:d]
+    nonloop = vsrc != vdst
+    return EdgeDelta(
+        src=jnp.asarray(np.concatenate([vsrc, vdst[nonloop], src[d:]])),
+        dst=jnp.asarray(np.concatenate([vdst, vsrc[nonloop], dst[d:]])),
+        weight=jnp.asarray(np.concatenate([vw, vw[nonloop], w[d:]])),
+        num_deltas=d + int(nonloop.sum()),
+    )
+
+
+def coalesce_edge_deltas(deltas: Sequence[EdgeDelta],
+                         pad_multiple: int | None = None) -> EdgeDelta:
+    """Merge a backlog into one batch: duplicate (src, dst) increments sum,
+    and pairs whose increments cancel exactly are dropped."""
+    srcs = [np.asarray(d.src)[: d.num_deltas] for d in deltas]
+    dsts = [np.asarray(d.dst)[: d.num_deltas] for d in deltas]
+    ws = [np.asarray(d.weight)[: d.num_deltas].astype(np.float64)
+          for d in deltas]
+    src = np.concatenate(srcs) if srcs else np.empty(0, np.int32)
+    dst = np.concatenate(dsts) if dsts else np.empty(0, np.int32)
+    w = np.concatenate(ws) if ws else np.empty(0, np.float64)
+    if src.size:
+        key = src.astype(np.int64) * (int(dst.max()) + 1) \
+            + dst.astype(np.int64)
+        uniq, first, inv = np.unique(key, return_index=True,
+                                     return_inverse=True)
+        wsum = np.zeros(uniq.size, np.float64)
+        np.add.at(wsum, inv, w)
+        keep = wsum != 0.0
+        src, dst, w = src[first[keep]], dst[first[keep]], wsum[keep]
+    out = edge_delta_from_numpy(src, dst, w.astype(np.float32))
+    if pad_multiple:
+        out = out.with_padding(pad_multiple)
+    return out
+
+
+def coalesce_label_deltas(deltas: Sequence[LabelDelta],
+                          pad_multiple: int | None = None) -> LabelDelta:
+    """Merge a backlog into one batch: last write per node wins."""
+    final: dict[int, int] = {}
+    for d in deltas:
+        nodes = np.asarray(d.node)[: d.num_deltas]
+        labs = np.asarray(d.new_label)[: d.num_deltas]
+        for nd, lb in zip(nodes, labs):
+            final[int(nd)] = int(lb)
+    nodes = np.fromiter(final.keys(), np.int32, len(final))
+    labs = np.fromiter(final.values(), np.int32, len(final))
+    out = label_delta_from_numpy(nodes, labs)
+    if pad_multiple:
+        out = out.with_padding(pad_multiple)
+    return out

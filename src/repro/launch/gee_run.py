@@ -19,13 +19,13 @@ from repro.graph.sbm import sample_sbm
 
 
 def _time(fn, repeats=3):
-    fn()                                  # warmup / compile
+    # Block on the warmup too: without it, the async compile+execute of the
+    # first call bleeds into the first timed repeat and inflates it.
+    jax.block_until_ready(fn())           # warmup / compile
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
-            else None
+        jax.block_until_ready(fn())       # no-op on host (numpy) outputs
         ts.append(time.perf_counter() - t0)
     return min(ts)
 
@@ -38,7 +38,7 @@ def main(argv=None):
                     help=f"one of {sorted(TABLE2)}")
     ap.add_argument("--backend", default="sparse_jax",
                     choices=("sparse_jax", "dense_jax", "scipy",
-                             "python_loop", "pallas"))
+                             "python_loop", "pallas", "auto"))
     ap.add_argument("--lap", action="store_true")
     ap.add_argument("--diag", action="store_true")
     ap.add_argument("--cor", action="store_true")
@@ -60,11 +60,17 @@ def main(argv=None):
     print(f"{name}: N={edges.num_nodes} E={edges.num_edges//2} K={k} "
           f"[{opts.tag()}]")
 
-    backends = (("sparse_jax", "dense_jax", "scipy", "python_loop")
+    backends = (("sparse_jax", "pallas", "auto", "dense_jax", "scipy",
+                 "python_loop")
                 if args.compare else (args.backend,))
     for b in backends:
         if b == "python_loop" and edges.num_edges > 3_000_000:
             print(f"  {b:12s}: skipped (too slow at this size)")
+            continue
+        if (b == "pallas" and args.compare
+                and jax.default_backend() != "tpu"):
+            print(f"  {b:12s}: skipped (interpret mode off-TPU; "
+                  f"run with --backend pallas to force)")
             continue
         if b == "pallas":
             from repro.kernels.ops import gee_pallas

@@ -1,0 +1,144 @@
+"""Edge-stream replay driver: incremental GEE vs from-scratch recompute.
+
+Holds out a fraction of a graph's undirected edges, fits ``IncrementalGEE``
+on the rest, then replays the held-out edges (plus optional label churn)
+through the delta-coalescing ``GEEDeltaServer`` in fixed-size batches,
+timing every update.  Periodically verifies the streamed state against a
+from-scratch ``gee_sparse_jax`` on the mutated graph and times that full
+recompute, so the output directly reports the update-vs-recompute latency
+gap the incremental subsystem exists for.
+
+  PYTHONPATH=src python -m repro.launch.gee_stream --sbm 2000 \
+      --stream-frac 0.2 --batch 64 --lap --diag --cor
+  PYTHONPATH=src python -m repro.launch.gee_stream --dataset citeseer
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gee import GEEOptions, gee_sparse_jax
+from repro.core.incremental import IncrementalGEE
+from repro.graph.containers import edge_list_from_numpy, symmetrize
+from repro.graph.datasets import TABLE2, load
+from repro.graph.delta import (edge_delta_from_numpy, label_delta_from_numpy,
+                               symmetrize_delta)
+from repro.graph.sbm import sample_sbm
+from repro.serve.batching import GEEDeltaServer
+
+
+def _undirected_pairs(edges):
+    """Valid directed entries -> one row per undirected edge (src <= dst)."""
+    e = edges.num_edges
+    src = np.asarray(edges.src)[:e]
+    dst = np.asarray(edges.dst)[:e]
+    w = np.asarray(edges.weight)[:e]
+    keep = src <= dst
+    return src[keep], dst[keep], w[keep]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sbm", type=int, default=None)
+    ap.add_argument("--dataset", default=None,
+                    help=f"one of {sorted(TABLE2)}")
+    ap.add_argument("--stream-frac", type=float, default=0.2,
+                    help="fraction of undirected edges replayed as a stream")
+    ap.add_argument("--batch", type=int, default=64,
+                    help="undirected edge inserts per delta batch")
+    ap.add_argument("--label-frac", type=float, default=0.02,
+                    help="label flips per batch, as a fraction of --batch")
+    ap.add_argument("--verify-every", type=int, default=20,
+                    help="full-recompute check every this many batches")
+    ap.add_argument("--lap", action="store_true")
+    ap.add_argument("--diag", action="store_true")
+    ap.add_argument("--cor", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.sbm:
+        s = sample_sbm(args.sbm, seed=args.seed)
+        edges, labels, k = s.edges, s.labels, s.num_classes
+        name = f"sbm-{args.sbm}"
+    else:
+        ds = load(args.dataset or "citeseer", seed=args.seed)
+        edges, labels, k = ds.edges, ds.labels, ds.spec.num_classes
+        name = ds.spec.name
+    opts = GEEOptions(laplacian=args.lap, diag_aug=args.diag,
+                      correlation=args.cor)
+
+    rng = np.random.default_rng(args.seed)
+    su, du, wu = _undirected_pairs(edges)
+    perm = rng.permutation(su.size)
+    su, du, wu = su[perm], du[perm], wu[perm]
+    n_stream = int(round(su.size * args.stream_frac))
+    n_base = su.size - n_stream
+    base = symmetrize(edge_list_from_numpy(
+        su[:n_base], du[:n_base], wu[:n_base], edges.num_nodes))
+    print(f"{name}: N={edges.num_nodes} K={k} [{opts.tag()}]  "
+          f"base E={n_base} streaming E={n_stream} in batches of {args.batch}")
+
+    t0 = time.perf_counter()
+    inc = IncrementalGEE.from_graph(base, labels, k, opts)
+    inc.embedding()
+    print(f"  initial fit + materialize: {(time.perf_counter()-t0)*1e3:.1f} ms")
+    server = GEEDeltaServer(inc, flush_every=args.batch)
+
+    y = labels.copy()
+    n_labels = max(1, int(round(args.batch * args.label_frac))) \
+        if args.label_frac > 0 else 0
+    update_ts, recompute_ts, max_err = [], [], 0.0
+    n_batches = -(-n_stream // args.batch)
+    for b in range(n_batches):
+        lo, hi = n_base + b * args.batch, n_base + min((b + 1) * args.batch,
+                                                       n_stream)
+        delta = symmetrize_delta(edge_delta_from_numpy(
+            su[lo:hi], du[lo:hi], wu[lo:hi]))
+        t0 = time.perf_counter()
+        server.submit(delta)
+        if n_labels:
+            nodes = rng.integers(0, edges.num_nodes, n_labels)
+            newl = rng.integers(0, k, n_labels).astype(np.int32)
+            server.submit(label_delta_from_numpy(nodes, newl))
+            y[nodes] = newl
+        server.flush()
+        server.embed()
+        update_ts.append(time.perf_counter() - t0)
+
+        if args.verify_every and (b + 1) % args.verify_every == 0:
+            cur = inc.to_edge_list()
+            zr = gee_sparse_jax(cur, jnp.asarray(y), k, opts)
+            jax.block_until_ready(zr)           # compile outside the timing
+            t0 = time.perf_counter()
+            jax.block_until_ready(gee_sparse_jax(cur, jnp.asarray(y), k,
+                                                 opts))
+            recompute_ts.append(time.perf_counter() - t0)
+            err = float(np.abs(inc.embedding() - np.asarray(zr)).max())
+            max_err = max(max_err, err)
+            print(f"  batch {b+1:4d}/{n_batches}: verify max_err={err:.2e}  "
+                  f"recompute={recompute_ts[-1]*1e3:.1f} ms")
+
+    ts = np.asarray(update_ts) * 1e3
+    print(f"  update latency over {ts.size} batches: "
+          f"mean={ts.mean():.2f} ms p50={np.percentile(ts, 50):.2f} ms "
+          f"p95={np.percentile(ts, 95):.2f} ms")
+    if recompute_ts:
+        rc = float(np.mean(recompute_ts)) * 1e3
+        print(f"  full recompute: {rc:.2f} ms -> "
+              f"update/recompute = {ts.mean()/rc:.2f}x  "
+              f"(max verify err {max_err:.2e})")
+    print(f"  server stats: {server.stats}")
+    print(f"  incremental stats: {inc.stats}")
+    return {"update_ms_mean": float(ts.mean()),
+            "recompute_ms": float(np.mean(recompute_ts)) * 1e3
+            if recompute_ts else None,
+            "max_err": max_err}
+
+
+if __name__ == "__main__":
+    main()

@@ -2,13 +2,14 @@
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
 from repro.graph.containers import (EdgeList, add_self_loops,
                                     edge_list_from_numpy, edges_to_csr_host,
                                     edges_to_ell, degrees, symmetrize,
                                     to_dense)
 from repro.graph.sbm import sample_sbm
-from repro.graph.datasets import TABLE2, synth_like
+from repro.graph.datasets import DatasetSpec, TABLE2, synth_like
 
 
 def test_ell_matches_dense(sbm_small):
@@ -84,3 +85,94 @@ def test_ell_truncation_cap():
     ell = edges_to_ell(e, max_degree=2)
     assert ell.cols.shape[1] == 2
     assert float(jnp.sum(ell.vals)) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# regression: padded symmetrize must not hide reversed edges behind padding
+# ---------------------------------------------------------------------------
+
+def test_symmetrize_padded_packs_reversed_edges_and_exact_count():
+    src = np.array([0, 1, 2, 2])
+    dst = np.array([1, 2, 0, 2])          # includes a self loop 2-2
+    plain = symmetrize(edge_list_from_numpy(src, dst, None, 3))
+    padded = symmetrize(edge_list_from_numpy(src, dst, None, 3, pad_to=64))
+    # exact count: 2 * 4 edges - 1 self loop kept single
+    assert plain.num_edges == padded.num_edges == 7
+    # every valid entry carries weight; reversed edges precede the padding
+    for e in (plain, padded):
+        w = np.asarray(e.weight)
+        assert np.all(w[: e.num_edges] != 0)
+        assert np.all(w[e.num_edges:] == 0)
+    np.testing.assert_allclose(np.asarray(degrees(padded)),
+                               np.asarray(degrees(plain)))
+
+
+def test_symmetrize_padded_identical_z_across_backends():
+    """The bug: scipy/python_loop slice [:num_edges] and used to see the
+    padding instead of the reversed half, silently embedding a directed
+    graph.  All backends must now agree on padded inputs."""
+    from repro.core.gee import ALL_OPTION_SETTINGS, gee
+
+    rng = np.random.default_rng(2)
+    n, e, k = 40, 90, 3
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = (src + 1 + rng.integers(0, n - 1, e)).astype(np.int32) % n
+    src[:3] = dst[:3] = np.array([5, 6, 7])   # a few self loops
+    w = (rng.random(e) + 0.1).astype(np.float32)
+    labels = rng.integers(0, k, n).astype(np.int32)
+    plain = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    padded = symmetrize(edge_list_from_numpy(src, dst, w, n, pad_to=512))
+    for opts in ALL_OPTION_SETTINGS:
+        ref = np.asarray(gee(plain, labels, k, opts, backend="dense_jax"))
+        for backend in ("sparse_jax", "scipy", "python_loop", "dense_jax"):
+            out = np.asarray(gee(padded, labels, k, opts, backend=backend))
+            np.testing.assert_allclose(
+                out, ref, atol=2e-5,
+                err_msg=f"padded {backend} vs plain dense, {opts.tag()}")
+
+
+def test_symmetrize_padded_identical_z_pallas_backend():
+    """Same invariant on the Pallas/ELL path: ``add_self_loops`` on a padded
+    list used to append the diagonal after the padding slots, so the ELL
+    packer's [:num_edges] slice silently dropped the whole augmentation."""
+    from repro.core.gee import GEEOptions, gee
+
+    rng = np.random.default_rng(4)
+    n, e, k = 32, 60, 3
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = (src + 1 + rng.integers(0, n - 1, e)).astype(np.int32) % n
+    w = (rng.random(e) + 0.1).astype(np.float32)
+    labels = rng.integers(0, k, n).astype(np.int32)
+    plain = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    padded = symmetrize(edge_list_from_numpy(src, dst, w, n, pad_to=256))
+    opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+    ref = np.asarray(gee(plain, labels, k, opts, backend="dense_jax"))
+    out = np.asarray(gee(padded, labels, k, opts, backend="pallas"))
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# regression: the dataset sampler's self-loop reroll must not hit src
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_synth_like_reroll_never_reintroduces_self_loops(seed):
+    """The reroll used to offset from the old dst, which can land exactly on
+    src; offsetting from src makes loops impossible by construction."""
+    spec = TABLE2["citeseer"]
+    ds = synth_like(spec, seed=seed)
+    e = ds.edges.num_edges
+    src = np.asarray(ds.edges.src)[:e]
+    dst = np.asarray(ds.edges.dst)[:e]
+    assert e > 0 and not np.any(src == dst)
+
+
+def test_synth_like_small_n_loop_free():
+    """Tiny graphs maximize the reroll collision probability."""
+    spec = DatasetSpec("tiny", num_nodes=4, num_edges=64, num_classes=2)
+    for seed in range(10):
+        ds = synth_like(spec, seed=seed)
+        e = ds.edges.num_edges
+        src = np.asarray(ds.edges.src)[:e]
+        dst = np.asarray(ds.edges.dst)[:e]
+        assert not np.any(src == dst)

@@ -1,0 +1,258 @@
+"""Incremental GEE: delta containers, streaming state, serving layer.
+
+The core contract: after ANY sequence of edge/label deltas, the incremental
+state's embedding matches a from-scratch ``gee_sparse_jax`` on the mutated
+graph to 1e-5, under every option setting.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.api import GEEEmbedder
+from repro.core.gee import ALL_OPTION_SETTINGS, GEEOptions, gee_sparse_jax
+from repro.core.incremental import IncrementalGEE
+from repro.graph.containers import edge_list_from_numpy, symmetrize
+from repro.graph.delta import (EdgeDelta, LabelDelta, coalesce_edge_deltas,
+                               coalesce_label_deltas, edge_delta_from_numpy,
+                               label_delta_from_numpy, symmetrize_delta)
+from repro.serve.batching import GEEDeltaServer
+
+PAD = 2048          # fixed pad for from-scratch checks: one jit trace per opts
+
+
+def _random_graph(rng, n, e):
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = (src + 1 + rng.integers(0, n - 1, e)).astype(np.int32) % n
+    w = (rng.random(e) + 0.1).astype(np.float32)
+    return src, dst, w
+
+
+def _check(inc, labels, k, opts, atol=1e-5):
+    cur = inc.to_edge_list(pad_to=PAD)
+    ref = np.asarray(gee_sparse_jax(cur, jnp.asarray(labels), k, opts))
+    np.testing.assert_allclose(inc.embedding(), ref, atol=atol,
+                               err_msg=opts.tag())
+
+
+@pytest.mark.parametrize("opts", ALL_OPTION_SETTINGS,
+                         ids=[o.tag() for o in ALL_OPTION_SETTINGS])
+def test_incremental_matches_recompute_over_random_deltas(opts):
+    """Inserts, weight bumps, removals, and label flips (incl. to/from
+    unknown), interleaved, checked against from-scratch every step."""
+    rng = np.random.default_rng(7)
+    n, e, k = 50, 120, 4
+    src, dst, w = _random_graph(rng, n, e)
+    labels = rng.integers(-1, k, n).astype(np.int32)
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    inc = IncrementalGEE.from_graph(edges, labels, k, opts)
+    _check(inc, labels, k, opts)
+
+    y = labels.copy()
+    for step in range(6):
+        # undirected inserts / weight bumps
+        ns, nd, nw = _random_graph(rng, n, 8)
+        inc.apply(symmetrize_delta(edge_delta_from_numpy(ns, nd, nw,
+                                                         pad_to=64)))
+        # removals: negate the full current weight of existing edges
+        cur = inc.to_edge_list()
+        ce = cur.num_edges
+        pick = rng.choice(ce, size=min(5, ce), replace=False)
+        rs = np.asarray(cur.src)[pick]
+        rd = np.asarray(cur.dst)[pick]
+        rw = -np.asarray(cur.weight)[pick]
+        inc.apply(edge_delta_from_numpy(rs, rd, rw, pad_to=64))
+        # label churn
+        nodes = rng.integers(0, n, 4)
+        newl = rng.integers(-1, k, 4).astype(np.int32)
+        inc.apply(label_delta_from_numpy(nodes, newl, pad_to=16))
+        y[nodes] = newl
+        _check(inc, y, k, opts)
+
+
+def test_incremental_from_empty_graph():
+    """Streaming from an empty graph (cold start) is exact too."""
+    rng = np.random.default_rng(3)
+    n, k = 30, 3
+    labels = rng.integers(0, k, n).astype(np.int32)
+    opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+    inc = IncrementalGEE.from_graph(
+        edge_list_from_numpy(np.empty(0, np.int32), np.empty(0, np.int32),
+                             None, n), labels, k, opts)
+    src, dst, w = _random_graph(rng, n, 40)
+    inc.apply(symmetrize_delta(edge_delta_from_numpy(src, dst, w)))
+    _check(inc, labels, k, opts)
+
+
+def test_padding_slots_are_noops():
+    rng = np.random.default_rng(5)
+    n, k = 20, 3
+    src, dst, w = _random_graph(rng, n, 30)
+    labels = rng.integers(0, k, n).astype(np.int32)
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    opts = GEEOptions(laplacian=True, diag_aug=True)
+    a = IncrementalGEE.from_graph(edges, labels, k, opts)
+    b = IncrementalGEE.from_graph(edges, labels, k, opts)
+    ns, nd, nw = _random_graph(rng, n, 6)
+    a.apply(edge_delta_from_numpy(ns, nd, nw))
+    b.apply(edge_delta_from_numpy(ns, nd, nw, pad_to=512))
+    np.testing.assert_array_equal(a.embedding(), b.embedding())
+    lb = label_delta_from_numpy(np.array([3, 4]), np.array([1, 2]))
+    a.apply(lb)
+    b.apply(lb.with_padding(128))
+    np.testing.assert_array_equal(a.embedding(), b.embedding())
+
+
+def test_delta_rejects_out_of_range_nodes():
+    inc = IncrementalGEE(num_nodes=5, num_classes=2)
+    with pytest.raises(ValueError):
+        inc.apply(edge_delta_from_numpy(np.array([0]), np.array([9]),
+                                        np.array([1.0])))
+    with pytest.raises(ValueError):
+        # negative ids would silently wrap via numpy indexing
+        inc.apply(edge_delta_from_numpy(np.array([-1]), np.array([2]),
+                                        np.array([1.0])))
+    with pytest.raises(ValueError):
+        inc.apply(label_delta_from_numpy(np.array([7]), np.array([0])))
+
+
+def test_label_delta_is_atomic_on_invalid_batch():
+    """A bad entry anywhere in the batch must not leave the state
+    half-mutated (the serving queue would otherwise wedge on a poisoned
+    batch with silently diverged accumulators)."""
+    inc = IncrementalGEE(num_nodes=5, num_classes=2)
+    inc.apply(label_delta_from_numpy(np.arange(5), np.zeros(5, np.int32)))
+    nk_before = inc.nk.copy()
+    labels_before = inc.labels.copy()
+    with pytest.raises(ValueError):
+        inc.apply(label_delta_from_numpy(np.array([0, 9]), np.array([1, 0])))
+    np.testing.assert_array_equal(inc.nk, nk_before)
+    np.testing.assert_array_equal(inc.labels, labels_before)
+
+
+def test_embedding_cache_is_read_only():
+    inc = IncrementalGEE(num_nodes=4, num_classes=2)
+    z = inc.embedding()
+    with pytest.raises(ValueError):
+        z[0, 0] = 1.0
+
+
+def test_coalesce_edge_deltas_sums_and_cancels():
+    d1 = edge_delta_from_numpy(np.array([0, 1]), np.array([1, 2]),
+                               np.array([1.0, 2.0]))
+    d2 = edge_delta_from_numpy(np.array([0, 1]), np.array([1, 2]),
+                               np.array([0.5, -2.0]))
+    merged = coalesce_edge_deltas([d1, d2])
+    assert merged.num_deltas == 1          # (1,2) cancelled exactly
+    assert int(merged.src[0]) == 0 and int(merged.dst[0]) == 1
+    assert float(merged.weight[0]) == pytest.approx(1.5)
+
+
+def test_coalesce_label_deltas_last_write_wins():
+    d1 = label_delta_from_numpy(np.array([4, 2]), np.array([0, 1]))
+    d2 = label_delta_from_numpy(np.array([4]), np.array([2]))
+    merged = coalesce_label_deltas([d1, d2], pad_multiple=8)
+    got = {int(n): int(l) for n, l in
+           zip(np.asarray(merged.node)[: merged.num_deltas],
+               np.asarray(merged.new_label)[: merged.num_deltas])}
+    assert got == {4: 2, 2: 1}
+    assert merged.padded_size == 8
+
+
+def test_partial_fit_matches_full_refit():
+    rng = np.random.default_rng(11)
+    n, k = 40, 3
+    src, dst, w = _random_graph(rng, n, 80)
+    labels = rng.integers(0, k, n).astype(np.int32)
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    emb = GEEEmbedder(num_classes=k).fit(edges, labels)
+    z0 = np.asarray(emb.transform())
+
+    ns, nd, nw = _random_graph(rng, n, 10)
+    delta = symmetrize_delta(edge_delta_from_numpy(ns, nd, nw))
+    ldelta = label_delta_from_numpy(np.array([0, 1]), np.array([2, 0]))
+    emb.partial_fit(delta).partial_fit(ldelta)
+    z1 = np.asarray(emb.transform())
+    assert not np.allclose(z0, z1)
+
+    y = labels.copy()
+    y[[0, 1]] = [2, 0]
+    fresh = GEEEmbedder(num_classes=k).fit(emb.current_edges(), y)
+    np.testing.assert_allclose(z1, np.asarray(fresh.transform()), atol=1e-5)
+    # downstream classification still works off the streamed state
+    assert emb.predict().shape == (n,)
+
+
+def test_delta_server_coalesces_and_serves():
+    rng = np.random.default_rng(13)
+    n, k = 30, 3
+    src, dst, w = _random_graph(rng, n, 60)
+    labels = rng.integers(0, k, n).astype(np.int32)
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+    inc = IncrementalGEE.from_graph(edges, labels, k, opts)
+    server = GEEDeltaServer(inc, flush_every=1000, pad_multiple=16)
+    w_before = inc.out_nbrs[2].get(5, 0.0)
+
+    # duplicate increments on the same pair should coalesce to one delta
+    for _ in range(4):
+        server.submit(edge_delta_from_numpy(np.array([2]), np.array([5]),
+                                            np.array([0.25])))
+    server.submit(label_delta_from_numpy(np.array([2, 2]), np.array([1, 0])))
+    assert server.stats["flushes"] == 0     # under the flush threshold
+    z = server.embed()                      # read forces the flush
+    assert server.stats["flushes"] == 1
+    assert server.stats["applied_deltas"] < server.stats["submitted"]
+
+    y = labels.copy()
+    y[2] = 0
+    expect = IncrementalGEE.from_graph(inc.to_edge_list(), y, k, opts)
+    np.testing.assert_allclose(z, expect.embedding(), atol=1e-6)
+    assert float(inc.out_nbrs[2][5]) == pytest.approx(w_before + 1.0)
+
+    # stale reads: monitoring-style access skips the flush
+    server.submit(edge_delta_from_numpy(np.array([1]), np.array([3]),
+                                        np.array([1.0])))
+    server.embed(max_staleness=None)
+    assert server.stats["stale_reads"] == 1
+    server.flush()
+
+
+def test_delta_server_survives_poisoned_batch():
+    """An invalid delta raises once at flush and is dropped -- it must not
+    wedge every subsequent submit/flush/read on the same error."""
+    inc = IncrementalGEE(num_nodes=5, num_classes=2)
+    server = GEEDeltaServer(inc, flush_every=1000)
+    server.submit(edge_delta_from_numpy(np.array([0]), np.array([9]),
+                                        np.array([1.0])))
+    with pytest.raises(ValueError):
+        server.embed()
+    assert server.stats["rejected_deltas"] == 1
+    # state is consistent and the server keeps serving
+    server.submit(edge_delta_from_numpy(np.array([0]), np.array([1]),
+                                        np.array([1.0])))
+    assert server.embed().shape == (5, 2)
+    assert inc.stats["edge_deltas"] == 1
+
+
+def test_delta_server_autoflush_threshold():
+    inc = IncrementalGEE(num_nodes=10, num_classes=2)
+    server = GEEDeltaServer(inc, flush_every=4)
+    for i in range(4):
+        server.submit(edge_delta_from_numpy(np.array([i]), np.array([i + 1]),
+                                            np.array([1.0])))
+    assert server.stats["flushes"] == 1     # hit the threshold
+    assert inc.stats["edge_deltas"] == 4
+
+
+def test_delta_types_are_pytrees():
+    d = edge_delta_from_numpy(np.array([0]), np.array([1]), np.array([2.0]),
+                              pad_to=8)
+    leaves = jnp.asarray(d.src)             # registered dataclass: jit-safe
+    assert isinstance(d, EdgeDelta) and leaves.shape == (8,)
+    import jax
+
+    mapped = jax.tree.map(lambda x: x * 2, d)
+    assert float(mapped.weight[0]) == 4.0
+    lb = label_delta_from_numpy(np.array([1]), np.array([0]), pad_to=4)
+    assert isinstance(jax.tree.map(lambda x: x, lb), LabelDelta)
