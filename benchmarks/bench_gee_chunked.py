@@ -1,0 +1,214 @@
+"""Out-of-core GEE: peak memory and throughput vs. the in-memory path.
+
+The chunked pipeline's claim is *bounded* host memory: streaming the edge
+list from disk in fixed windows keeps peak RSS ~flat while E grows,
+whereas the in-memory path's peak grows linearly with E.  Throughput
+(edges/s through the full two-pass stream, disk reads included) should
+stay within ~2x of the in-memory segment-sum compute.
+
+Measurement: peak RSS via ``resource.getrusage(...).ru_maxrss`` is a
+process-lifetime high-water mark, so every (size, mode) cell runs in its
+own child interpreter (the ``--child`` re-exec below); the parent
+orchestrates, diffs the embeddings the children wrote (<= 1e-5 asserted),
+and emits BENCH_gee_chunked.json -- CI uploads it as a per-commit
+artifact alongside the other benchmark JSONs.
+
+Fixtures are generated on disk by ``repro.graph.datasets.synth_to_disk``
+(never materialized in host memory) across a >= 10x edge span.
+
+  PYTHONPATH=src python benchmarks/bench_gee_chunked.py \
+      [--nodes 20000,60000,200000] [--deg 10] [--chunk-edges 262144]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "..", "src")
+sys.path.insert(0, REPO_SRC)
+
+NODES = (20_000, 60_000, 200_000)
+OPTS_FLAGS = ("--lap", "--diag", "--cor")
+
+
+def _child(args) -> None:
+    """One measured cell: embed `--file` with `--mode`, print a JSON line."""
+    from repro.core.chunked import gee_chunked
+    from repro.core.gee import GEEOptions, gee_sparse_jax
+    from repro.graph.datasets import load_file
+    from repro.graph.io import load_labels, open_edge_list
+    import jax
+
+    opts = GEEOptions(laplacian=args.lap, diag_aug=args.diag,
+                      correlation=args.cor)
+    if args.mode == "chunked":
+        t0 = time.perf_counter()
+        chunked = open_edge_list(args.file, chunk_edges=args.chunk_edges)
+        labels = load_labels(args.file)
+        k = int(labels.max()) + 1
+        fn = lambda: gee_chunked(chunked, labels, k, opts)
+        z = jax.block_until_ready(fn())
+        t_first = time.perf_counter() - t0      # open + trace + stream
+        ts = []
+        for _ in range(args.repeats):           # warm: chunk reads included
+            t0 = time.perf_counter()
+            z = jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        t_embed = min(ts)
+    else:
+        t0 = time.perf_counter()
+        ds = load_file(args.file)               # materialize + symmetrize
+        labels = load_labels(args.file)
+        k = int(labels.max()) + 1
+        t_load = time.perf_counter() - t0
+        fn = lambda: gee_sparse_jax(ds.edges, labels, k, opts)
+        jax.block_until_ready(fn())             # warmup/compile
+        ts = []
+        for _ in range(args.repeats):
+            t0 = time.perf_counter()
+            z = jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        t_embed = min(ts)
+        t_first = t_load + t_embed
+    np.save(args.z_out, np.asarray(z))
+    print(json.dumps({
+        "mode": args.mode,
+        "rss_kb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss,
+        "t_first": t_first, "t_embed": t_embed,
+    }), flush=True)
+
+
+def _run_child(mode, file, chunk_edges, z_out, opt_flags, repeats=3):
+    cmd = [sys.executable, os.path.abspath(__file__), "--child",
+           "--mode", mode, "--file", file,
+           "--chunk-edges", str(chunk_edges), "--z-out", z_out,
+           "--repeats", str(repeats), *opt_flags]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(f"child {mode} failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("{")][-1]
+    return json.loads(line)
+
+
+def run(nodes=NODES, deg=10, classes=5, chunk_edges=1 << 18, seed=0,
+        workdir=None, opt_flags=OPTS_FLAGS, repeats=3):
+    from repro.graph.datasets import DatasetSpec, synth_to_disk
+
+    workdir = workdir or tempfile.mkdtemp(prefix="bench_gee_chunked_")
+    rows = []
+    for n in nodes:
+        e = n * deg // 2
+        spec = DatasetSpec(f"synth-{n}", n, e, classes)
+        path = os.path.join(workdir, f"synth_{n}.geeb")
+        synth_to_disk(spec, path, seed=seed, chunk_edges=chunk_edges)
+        cells = {}
+        for mode in ("chunked", "inmem"):
+            z_out = os.path.join(workdir, f"z_{n}_{mode}.npy")
+            cells[mode] = _run_child(mode, path, chunk_edges, z_out,
+                                     opt_flags, repeats)
+            cells[mode]["z_out"] = z_out
+        err = float(np.abs(np.load(cells["chunked"]["z_out"])
+                           - np.load(cells["inmem"]["z_out"])).max())
+        assert err <= 1e-5, f"chunked diverged from in-memory: {err}"
+        row = {
+            "nodes": n, "edges_undirected": e,
+            "chunk_edges": chunk_edges,
+            "rss_chunked_kb": cells["chunked"]["rss_kb"],
+            "rss_inmem_kb": cells["inmem"]["rss_kb"],
+            "t_chunked": cells["chunked"]["t_embed"],
+            "t_inmem": cells["inmem"]["t_embed"],
+            "t_chunked_cold": cells["chunked"]["t_first"],
+            "t_inmem_cold": cells["inmem"]["t_first"],
+            "eps_chunked": e / cells["chunked"]["t_embed"],
+            "eps_inmem": e / cells["inmem"]["t_embed"],
+            "max_abs_err": err,
+        }
+        rows.append(row)
+        print(f"N={n:8d} E={e:10d}  "
+              f"rss chunked={row['rss_chunked_kb']/1024:7.1f}MB "
+              f"inmem={row['rss_inmem_kb']/1024:7.1f}MB  "
+              f"t chunked={row['t_chunked']*1e3:8.1f}ms "
+              f"inmem={row['t_inmem']*1e3:8.1f}ms  "
+              f"({row['eps_chunked']/1e6:6.2f} vs "
+              f"{row['eps_inmem']/1e6:6.2f} M edges/s)  err={err:.1e}")
+
+    e_span = (max(r["edges_undirected"] for r in rows)
+              / min(r["edges_undirected"] for r in rows))
+    rss_growth = (max(r["rss_chunked_kb"] for r in rows)
+                  / min(r["rss_chunked_kb"] for r in rows))
+    rss_growth_inmem = (max(r["rss_inmem_kb"] for r in rows)
+                        / min(r["rss_inmem_kb"] for r in rows))
+    slowdown = max(r["t_chunked"] / r["t_inmem"] for r in rows)
+    print(f"edge span {e_span:.1f}x: chunked peak-RSS growth "
+          f"{rss_growth:.2f}x (in-memory {rss_growth_inmem:.2f}x), "
+          f"worst chunked/inmem time ratio {slowdown:.2f}x")
+    return rows, {"edge_span": e_span, "rss_growth_chunked": rss_growth,
+                  "rss_growth_inmem": rss_growth_inmem,
+                  "max_slowdown": slowdown}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", action="store_true",
+                    help=argparse.SUPPRESS)   # internal re-exec mode
+    ap.add_argument("--mode", choices=("chunked", "inmem"), default=None)
+    ap.add_argument("--file", default=None)
+    ap.add_argument("--z-out", default=None)
+    ap.add_argument("--lap", action="store_true", default=None)
+    ap.add_argument("--diag", action="store_true", default=None)
+    ap.add_argument("--cor", action="store_true", default=None)
+    ap.add_argument("--nodes", type=str, default=",".join(map(str, NODES)))
+    ap.add_argument("--deg", type=int, default=10)
+    ap.add_argument("--classes", type=int, default=5)
+    ap.add_argument("--chunk-edges", type=int, default=1 << 18)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="warm repeats per cell (min is reported)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workdir", type=str, default=None,
+                    help="fixture directory (default: fresh tempdir)")
+    ap.add_argument("--json", type=str, default="BENCH_gee_chunked.json",
+                    help="output JSON path ('' disables)")
+    ap.add_argument("--max-slowdown", type=float, default=0.0,
+                    help="fail if chunked/inmem embed-time ratio exceeds "
+                         "this (0 disables; wall-clock gating is for local "
+                         "perf runs, CI only records the JSON)")
+    args = ap.parse_args(argv)
+    if args.child:
+        return _child(args)
+
+    nodes = tuple(int(x) for x in args.nodes.split(",") if x)
+    opt_flags = [f for f, on in (("--lap", args.lap), ("--diag", args.diag),
+                                 ("--cor", args.cor)) if on]
+    if not opt_flags:
+        opt_flags = list(OPTS_FLAGS)
+    rows, summary = run(nodes, args.deg, args.classes, args.chunk_edges,
+                        args.seed, args.workdir, opt_flags, args.repeats)
+    if args.json:
+        payload = {"benchmark": "gee_chunked", "opts": opt_flags,
+                   **summary, "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+    if args.max_slowdown and summary["max_slowdown"] > args.max_slowdown:
+        raise SystemExit(
+            f"chunked is {summary['max_slowdown']:.2f}x slower than "
+            f"in-memory, over --max-slowdown {args.max_slowdown}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Docs rot-guard: verify every cross-reference in docs/*.md + README.md.
+
+Checked, all offline:
+
+  1. Relative markdown links ``[text](path)`` resolve to real files, and
+     ``path#anchor`` targets a heading that actually exists (GitHub slug
+     rules: lowercase, punctuation stripped, spaces -> dashes).
+  2. Code-span symbol references of the form ``repro/<file>.py::<symbol>``
+     (the convention used by docs/paper-map.md) point at an existing file
+     under ``src/`` that really defines the symbol (``def``/``class`` or
+     module-level assignment) -- so the paper-to-code map cannot drift
+     from the code it maps.
+  3. Plain code-span file references like ``benchmarks/foo.py`` or
+     ``repro/core/gee.py`` exist on disk.
+
+External http(s) links are ignored (CI has no network guarantee).
+
+  python docs/check_links.py          # from the repo root (CI does this)
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MD_FILES = ["README.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir(os.path.join(REPO, "docs"))
+    if f.endswith(".md"))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+SYMBOL_RE = re.compile(r"^([\w./-]+\.py)::(\w+)$")
+FILE_RE = re.compile(r"^[\w./-]+\.(py|md|json|yml|toml)$")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip code ticks/punctuation, spaces->dashes."""
+    h = heading.strip().lower().replace("`", "")
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(md_path: str) -> set:
+    with open(md_path) as f:
+        text = f.read()
+    return {github_slug(m) for m in HEADING_RE.findall(text)}
+
+
+def resolve_symbol_file(ref_file: str) -> str | None:
+    """A ``repro/...py`` ref lives under src/; others are repo-relative."""
+    for base in (os.path.join(REPO, "src"), REPO):
+        p = os.path.join(base, ref_file)
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def symbol_defined(py_path: str, symbol: str) -> bool:
+    with open(py_path) as f:
+        src = f.read()
+    pat = re.compile(
+        rf"^\s*(?:def|class)\s+{re.escape(symbol)}\b"    # def / class
+        rf"|^{re.escape(symbol)}\s*(?::[^=\n]+)?=",      # module-level assign
+        re.MULTILINE)
+    return bool(pat.search(src))
+
+
+def check_file(md_rel: str) -> list:
+    md_path = os.path.join(REPO, md_rel)
+    md_dir = os.path.dirname(md_path)
+    with open(md_path) as f:
+        text = f.read()
+    errors = []
+
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path, _, anchor = target.partition("#")
+        dest = md_path if not path else os.path.normpath(
+            os.path.join(md_dir, path))
+        if path and not dest.startswith(REPO + os.sep):
+            continue   # escapes the repo (e.g. GitHub badge URLs): not ours
+        if path and not os.path.exists(dest):
+            errors.append(f"{md_rel}: broken link -> {target}")
+            continue
+        if anchor and dest.endswith(".md"):
+            if github_slug(anchor) not in anchors_of(dest):
+                errors.append(f"{md_rel}: missing anchor -> {target}")
+
+    for span in CODE_RE.findall(text):
+        m = SYMBOL_RE.match(span)
+        if m:
+            ref_file, symbol = m.groups()
+            py = resolve_symbol_file(ref_file)
+            if py is None:
+                errors.append(f"{md_rel}: symbol ref to missing file "
+                              f"-> `{span}`")
+            elif not symbol_defined(py, symbol):
+                errors.append(f"{md_rel}: `{span}` -- symbol {symbol!r} "
+                              f"not defined in {ref_file}")
+            continue
+        if FILE_RE.match(span) and "/" in span:
+            if resolve_symbol_file(span) is None:
+                errors.append(f"{md_rel}: file ref to missing path "
+                              f"-> `{span}`")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for md in MD_FILES:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(f"ERROR {e}")
+    n_files = len(MD_FILES)
+    if errors:
+        print(f"{len(errors)} broken reference(s) across {n_files} files")
+        return 1
+    print(f"all references OK across {n_files} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

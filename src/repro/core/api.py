@@ -24,10 +24,26 @@ from repro.graph.containers import EdgeList, edge_list_from_numpy, symmetrize
 class GEEEmbedder:
     """Fit/transform-style wrapper around sparse GEE.
 
-    backend: 'sparse_jax' (default), 'pallas', 'auto', 'dense_jax', 'scipy',
-             'python_loop', or 'distributed'.
+    backend: 'sparse_jax' (default), 'pallas', 'auto', 'chunked',
+             'dense_jax', 'scipy', 'python_loop', or 'distributed'
+             (see ``docs/backends.md`` for the decision guide).
     local_backend: per-shard compute used by 'distributed' --
              'segment_sum' (default) or 'pallas' (ELL kernel per shard).
+
+    In-memory graphs go through ``fit``/``fit_transform``; graphs on disk
+    (any ``repro.graph.io`` format) go through ``fit_file`` /
+    ``fit_transform_file``, which stream in bounded memory.
+
+    >>> import numpy as np
+    >>> emb = GEEEmbedder.from_arrays(          # two triangles + a bridge
+    ...     src=np.array([0, 1, 0, 3, 4, 3, 2]),
+    ...     dst=np.array([1, 2, 2, 4, 5, 5, 3]),
+    ...     weight=None, labels=np.array([0, 0, 0, 1, 1, 1], np.int32),
+    ...     num_classes=2)
+    >>> emb.transform().shape
+    (6, 2)
+    >>> np.asarray(emb.predict()).tolist()      # recovers the communities
+    [0, 0, 0, 1, 1, 1]
     """
 
     num_classes: int
@@ -37,8 +53,10 @@ class GEEEmbedder:
     mesh: Optional[object] = None            # required for 'distributed'
     mesh_axes: tuple = ("data",)
     local_backend: str = "segment_sum"       # 'distributed' only
+    chunk_edges: Optional[int] = None        # 'chunked' / file-backed only
 
     _edges: Optional[EdgeList] = dataclasses.field(default=None, repr=False)
+    _chunked: Optional[object] = dataclasses.field(default=None, repr=False)
     _labels: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
     _z: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
     _inc: Optional[IncrementalGEE] = dataclasses.field(default=None,
@@ -62,10 +80,42 @@ class GEEEmbedder:
     # -- sklearn-ish surface -------------------------------------------------
     def fit(self, edges: EdgeList, labels) -> "GEEEmbedder":
         self._edges = edges
+        self._chunked = None
         self._labels = jnp.asarray(labels, jnp.int32)
         self._z = None
         self._inc = None
         return self
+
+    def fit_file(self, path: str, labels=None, **open_kw) -> "GEEEmbedder":
+        """Fit from an on-disk edge list without materializing it.
+
+        ``path`` is any ``repro.graph.io`` format (``.geeb`` memory-maps;
+        text converts to a mmap sidecar once).  ``labels=None`` reads the
+        ``<path>.labels.npy`` sidecar.  ``open_kw`` is forwarded to
+        :func:`repro.graph.io.open_edge_list` (``index_base``,
+        ``num_nodes``, ``undirected``, ...).  ``transform`` then streams
+        the two-pass chunked algorithm whatever ``backend`` says.
+        """
+        from repro.graph.io import (DEFAULT_CHUNK_EDGES, load_labels,
+                                    open_edge_list)
+
+        chunk = self.chunk_edges or DEFAULT_CHUNK_EDGES
+        self._chunked = open_edge_list(path, chunk_edges=chunk, **open_kw)
+        if labels is None:
+            labels = load_labels(path)
+            if labels is None:
+                raise ValueError(
+                    f"no labels given and no sidecar {path}.labels.npy")
+        self._edges = None
+        self._labels = jnp.asarray(labels, jnp.int32)
+        self._z = None
+        self._inc = None
+        return self
+
+    def fit_transform_file(self, path: str, labels=None,
+                           **open_kw) -> jax.Array:
+        """``fit_file`` + ``transform`` in one call (bounded memory)."""
+        return self.fit_file(path, labels, **open_kw).transform()
 
     def partial_fit(self, delta: Delta) -> "GEEEmbedder":
         """Apply an ``EdgeDelta`` / ``LabelDelta`` (or a sequence of them)
@@ -76,6 +126,12 @@ class GEEEmbedder:
         (numerically the ``sparse_jax`` contract, whatever ``backend`` says).
         """
         if self._edges is None:
+            if self._chunked is not None:
+                raise RuntimeError(
+                    "partial_fit needs the in-memory path: file-backed fits "
+                    "stream from disk and keep no live adjacency.  "
+                    "fit(chunked.to_edge_list(), labels) first if the graph "
+                    "fits in memory.")
             raise RuntimeError("call fit() first")
         if self._inc is None:
             self._inc = IncrementalGEE.from_graph(
@@ -91,15 +147,27 @@ class GEEEmbedder:
         return self._inc
 
     def current_edges(self) -> EdgeList:
-        """The graph actually embedded: the mutated one once streaming."""
+        """The graph actually embedded: the mutated one once streaming.
+
+        For file-backed fits this *materializes* the on-disk list (and
+        symmetrizes undirected storage) -- fine for inspection, contrary
+        to the point at out-of-core scale.
+        """
         if self._inc is not None:
             return self._inc.to_edge_list()
+        if self._chunked is not None:
+            return self._chunked.to_edge_list()
         if self._edges is None:
             raise RuntimeError("call fit() first")
         return self._edges
 
+    def _num_nodes(self) -> int:
+        if self._chunked is not None:
+            return self._chunked.num_nodes
+        return self._edges.num_nodes
+
     def transform(self) -> jax.Array:
-        if self._edges is None:
+        if self._edges is None and self._chunked is None:
             raise RuntimeError("call fit() first")
         if self._inc is not None:
             # Re-upload host Z only when rows are actually stale, so repeat
@@ -117,7 +185,7 @@ class GEEEmbedder:
     # -- classification on top of the embedding ------------------------------
     def class_means(self) -> jax.Array:
         z = self.transform()
-        z = z[: self._edges.num_nodes]
+        z = z[: self._num_nodes()]
         onehot = jax.nn.one_hot(self._labels, self.num_classes, dtype=z.dtype)
         counts = onehot.sum(0)
         return (onehot.T @ z) / jnp.maximum(counts, 1.0)[:, None]
@@ -125,7 +193,7 @@ class GEEEmbedder:
     def predict(self, rows: jax.Array | None = None) -> jax.Array:
         """Nearest-class-mean vertex classification (the standard GEE
         downstream evaluation)."""
-        z = self.transform()[: self._edges.num_nodes]
+        z = self.transform()[: self._num_nodes()]
         if rows is not None:
             z = z[rows]
         means = self.class_means()
@@ -135,6 +203,20 @@ class GEEEmbedder:
     # -- internals -----------------------------------------------------------
     def _compute(self) -> jax.Array:
         edges, labels = self._edges, self._labels
+        if self._chunked is not None:
+            from repro.core.chunked import gee_chunked
+
+            return gee_chunked(self._chunked, labels, self.num_classes,
+                               self.options)
+        if self.backend == "chunked":
+            from repro.core.chunked import gee_chunked
+            from repro.graph.io import (DEFAULT_CHUNK_EDGES,
+                                        ChunkedEdgeList)
+
+            chunk = self.chunk_edges or DEFAULT_CHUNK_EDGES
+            return gee_chunked(
+                ChunkedEdgeList.from_edge_list(edges, chunk),
+                labels, self.num_classes, self.options)
         if self.backend == "distributed":
             from repro.core.distributed import gee_distributed
 

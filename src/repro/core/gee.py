@@ -16,6 +16,11 @@ Backends (all numerically equivalent; tested against each other):
                     is the core-library path used by distributed GEE and the
                     Pallas kernel wraps the same contract.
 
+Two more live in their own modules and are reachable through ``gee``'s
+``backend=`` switch: ``chunked`` (``repro.core.chunked``: the out-of-core
+two-pass stream over disk-resident edge lists) and ``pallas``
+(``repro.kernels.ops``: the ELL-tiled MXU kernel).
+
 Shared semantics
 ----------------
 * labels: int32 [N], -1 = unknown (zero W row, still gets a Z row).
@@ -257,14 +262,32 @@ def gee(edges: EdgeList, labels, num_classes: int,
     """Dispatch front-end.
 
     Backends: ``sparse_jax`` (production default), ``pallas`` (ELL + Pallas
-    kernel), ``dense_jax`` (oracle), ``scipy`` (paper-faithful), and
-    ``python_loop`` (original-GEE reference).  ``auto`` picks via
-    ``select_backend``.
+    kernel), ``chunked`` (bounded-memory streaming, see
+    ``repro.core.chunked``), ``dense_jax`` (oracle), ``scipy``
+    (paper-faithful), and ``python_loop`` (original-GEE reference).
+    ``auto`` picks via ``select_backend``.  See ``docs/backends.md`` for
+    the full decision guide.
+
+    >>> import numpy as np
+    >>> from repro.graph.containers import edge_list_from_numpy, symmetrize
+    >>> edges = symmetrize(edge_list_from_numpy(      # path graph 0-1-2
+    ...     np.array([0, 1]), np.array([1, 2]), None, 3))
+    >>> z = gee(edges, np.array([0, 1, -1], np.int32), 2)
+    >>> z.shape                  # one embedding row per node, K columns
+    (3, 2)
+    >>> np.asarray(z)[0].tolist()  # node 0 sees neighbor 1 (class 1, n_1=1)
+    [0.0, 1.0]
     """
     if backend == "auto":
         backend = select_backend(edges, num_classes)
     if backend == "sparse_jax":
         return gee_sparse_jax(edges, jnp.asarray(labels), num_classes, opts)
+    if backend == "chunked":
+        from repro.core.chunked import gee_chunked  # deferred: avoids a cycle
+        from repro.graph.io import ChunkedEdgeList
+
+        return gee_chunked(ChunkedEdgeList.from_edge_list(edges),
+                           labels, num_classes, opts)
     if backend == "pallas":
         from repro.kernels.ops import gee_pallas   # deferred: avoids a cycle
 

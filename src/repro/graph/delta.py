@@ -20,6 +20,21 @@ Two delta kinds cover every GEE input mutation:
 batches into one minimal batch (sum duplicate (src, dst) increments; last
 write wins per node) -- the serving queue uses them so a burst of updates
 costs one state update.
+
+>>> import numpy as np
+>>> d = edge_delta_from_numpy(np.array([3]), np.array([9]),
+...                           np.array([1.0]))      # insert edge {3, 9}
+>>> d = symmetrize_delta(d)                         # store both directions
+>>> d.num_deltas, np.asarray(d.src).tolist(), np.asarray(d.dst).tolist()
+(2, [3, 9], [9, 3])
+>>> flip = label_delta_from_numpy(np.array([3]), np.array([2]))
+>>> int(flip.node[0]), int(flip.new_label[0])       # y[3] <- 2
+(3, 2)
+>>> merged = coalesce_edge_deltas([d, symmetrize_delta(
+...     edge_delta_from_numpy(np.array([3]), np.array([9]),
+...                           np.array([-1.0])))])  # insert then remove
+>>> merged.num_deltas                               # cancels to nothing
+0
 """
 
 from __future__ import annotations

@@ -1,0 +1,538 @@
+"""On-disk edge-list formats and bounded-memory chunked ingestion.
+
+The paper's headline claim -- "millions of edges within minutes on a
+standard laptop" -- needs graphs that never fit in host memory at once.
+This module is the ingestion layer every file-based workload loads
+through.  Three interchangeable formats:
+
+  ``.txt`` / ``.tsv`` / ``.edges``
+      SNAP-style text: one ``src dst [weight]`` line per edge, ``#``/``%``
+      comment and header lines skipped, whitespace- or tab-separated.
+      SNAP files conventionally list each undirected edge once, so text
+      defaults to ``undirected=True``; pass ``index_base=1`` for
+      1-indexed node ids.
+  ``.npz``
+      ``numpy.savez`` archive with ``src``/``dst``/``weight`` arrays plus
+      ``num_nodes`` and ``undirected`` scalars.  Convenient, but the zip
+      container cannot be memory-mapped -- convert to ``.geeb`` for
+      out-of-core runs.
+  ``.geeb``
+      Raw binary: a 32-byte header (magic, version, flags, N, E) followed
+      by contiguous ``src int32[E]``, ``dst int32[E]``, ``weight
+      float32[E]`` blocks.  Memory-maps directly; ``ChunkedEdgeList``
+      reads fixed-size windows so peak host memory is
+      O(chunk_edges + N), not O(E).
+
+``open_edge_list`` dispatches on the suffix and returns a
+``ChunkedEdgeList`` whose ``chunks()`` iterator yields padded
+:class:`~repro.graph.containers.EdgeList` views with *stable shapes*
+(every chunk's arrays are exactly ``chunk_edges`` long; the ragged tail
+is padded with weight-0 no-op edges), so a jitted consumer traces once.
+
+Example -- write a tiny SNAP file, stream it in 2-edge chunks:
+
+>>> import os, tempfile
+>>> d = tempfile.mkdtemp()
+>>> p = os.path.join(d, "toy.txt")
+>>> _ = open(p, "w").write("# toy graph\\n0 1\\n1 2\\n2 3\\n0 3\\n1 3\\n")
+>>> ch = open_edge_list(p, chunk_edges=2)
+>>> ch.num_nodes, ch.num_edges, ch.num_chunks, ch.undirected
+(4, 5, 3, True)
+>>> [int(c.num_edges) for c in ch.chunks()]     # ragged tail, stable shape
+[2, 2, 1]
+>>> {tuple(c.src.shape) for c in ch.chunks()}   # every chunk is padded alike
+{(2,)}
+>>> convert(p, os.path.join(d, "toy.geeb"))     # doctest: +ELLIPSIS
+'...toy.geeb'
+>>> open_edge_list(os.path.join(d, "toy.geeb")).num_edges
+5
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import struct
+from typing import Iterator, Tuple
+
+import numpy as np
+
+from repro.graph.containers import EdgeList, edge_list_from_numpy, symmetrize
+
+# Default streaming window: 1M edges = 12 MB of host memory per chunk.
+DEFAULT_CHUNK_EDGES = 1 << 20
+
+TEXT_SUFFIXES = (".txt", ".tsv", ".edges", ".el")
+_COMMENT_PREFIXES = ("#", "%", "//")
+
+# .geeb header: magic, u32 version, u32 flags, i64 num_nodes, i64 num_edges
+_GEEB_MAGIC = b"GEEB"
+_GEEB_VERSION = 1
+_GEEB_HEADER = struct.Struct("<4sIIqq")
+_GEEB_HEADER_SIZE = 32
+_FLAG_UNDIRECTED = 1
+assert _GEEB_HEADER.size <= _GEEB_HEADER_SIZE
+
+
+# ---------------------------------------------------------------------------
+# the chunked container (mmap- or array-backed)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedEdgeList:
+    """Host-side edge list read in fixed-size windows.
+
+    ``src``/``dst``/``weight`` are 1-D numpy arrays -- plain ``ndarray``
+    for in-memory sources, ``np.memmap`` views for ``.geeb`` files, so
+    slicing a chunk touches only that window of the file.
+
+    ``undirected`` means the storage holds *one entry per undirected
+    edge*; consumers (``repro.core.chunked.gee_chunked``) then process
+    each chunk in both directions (self loops counted once), matching
+    what :func:`repro.graph.containers.symmetrize` would materialize.
+    """
+
+    src: np.ndarray
+    dst: np.ndarray
+    weight: np.ndarray
+    num_nodes: int
+    chunk_edges: int = DEFAULT_CHUNK_EDGES
+    undirected: bool = False
+
+    def __post_init__(self):
+        if self.chunk_edges < 1:
+            raise ValueError(f"chunk_edges must be >= 1, got {self.chunk_edges}")
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def effective_chunk_edges(self) -> int:
+        """Actual window width: ``chunk_edges`` clamped to the edge count,
+        so a graph smaller than one window is not padded up to it."""
+        return max(1, min(self.chunk_edges, self.num_edges))
+
+    @property
+    def num_chunks(self) -> int:
+        return max(1, -(-self.num_edges // self.effective_chunk_edges))
+
+    def chunks(self) -> Iterator[EdgeList]:
+        """Yield padded ``EdgeList`` windows of identical shape.
+
+        Every chunk's arrays are exactly ``effective_chunk_edges`` long;
+        the final ragged chunk (and the single empty chunk of an edgeless
+        graph) is padded with weight-0 entries, which are exact no-ops for
+        every GEE formula.  ``num_edges`` on each chunk is the honest
+        valid count; jitted consumers should key on the arrays only.
+        """
+        c = self.effective_chunk_edges
+        for lo in range(0, max(self.num_edges, 1), c):
+            hi = min(lo + c, self.num_edges)
+            yield edge_list_from_numpy(
+                np.ascontiguousarray(self.src[lo:hi]),
+                np.ascontiguousarray(self.dst[lo:hi]),
+                np.ascontiguousarray(self.weight[lo:hi]),
+                self.num_nodes, pad_to=c)
+
+    def to_edge_list(self, pad_to: int | None = None) -> EdgeList:
+        """Materialize in memory (symmetrized if stored undirected).
+
+        Convenience for graphs that *do* fit; defeats the purpose at
+        out-of-core scale.
+        """
+        edges = edge_list_from_numpy(
+            np.asarray(self.src), np.asarray(self.dst),
+            np.asarray(self.weight), self.num_nodes, pad_to=pad_to)
+        return symmetrize(edges) if self.undirected else edges
+
+    @staticmethod
+    def from_edge_list(edges: EdgeList,
+                       chunk_edges: int = DEFAULT_CHUNK_EDGES,
+                       ) -> "ChunkedEdgeList":
+        """Wrap an in-memory (already-directed) ``EdgeList``'s valid prefix."""
+        e = edges.num_edges
+        return ChunkedEdgeList(
+            src=np.asarray(edges.src)[:e], dst=np.asarray(edges.dst)[:e],
+            weight=np.asarray(edges.weight)[:e], num_nodes=edges.num_nodes,
+            chunk_edges=min(max(1, e), chunk_edges), undirected=False)
+
+
+# ---------------------------------------------------------------------------
+# .geeb raw binary (the mmap format)
+# ---------------------------------------------------------------------------
+
+def write_binary_header(f, num_nodes: int, num_edges: int,
+                        undirected: bool) -> None:
+    flags = _FLAG_UNDIRECTED if undirected else 0
+    hdr = _GEEB_HEADER.pack(_GEEB_MAGIC, _GEEB_VERSION, flags,
+                            int(num_nodes), int(num_edges))
+    f.write(hdr.ljust(_GEEB_HEADER_SIZE, b"\0"))
+
+
+def read_binary_header(path: str) -> Tuple[int, int, bool]:
+    """Return ``(num_nodes, num_edges, undirected)`` from a ``.geeb`` file."""
+    with open(path, "rb") as f:
+        raw = f.read(_GEEB_HEADER_SIZE)
+    if len(raw) < _GEEB_HEADER_SIZE:
+        raise ValueError(f"{path}: truncated .geeb header")
+    magic, version, flags, n, e = _GEEB_HEADER.unpack(
+        raw[: _GEEB_HEADER.size])
+    if magic != _GEEB_MAGIC:
+        raise ValueError(f"{path}: not a .geeb file (magic {magic!r})")
+    if version != _GEEB_VERSION:
+        raise ValueError(f"{path}: unsupported .geeb version {version}")
+    return int(n), int(e), bool(flags & _FLAG_UNDIRECTED)
+
+
+def _geeb_offsets(num_edges: int) -> Tuple[int, int, int]:
+    src_off = _GEEB_HEADER_SIZE
+    dst_off = src_off + 4 * num_edges
+    w_off = dst_off + 4 * num_edges
+    return src_off, dst_off, w_off
+
+
+class BinaryEdgeWriter:
+    """Streaming writer for ``.geeb``: append chunks into a preallocated
+    memory-mapped file, so multi-million-edge fixtures are generated
+    without ever holding the full edge list in memory.
+
+    The segregated block layout (all src, then all dst, then all weight)
+    requires ``num_edges`` up front; converters do a cheap counting scan
+    first.  Use as a context manager -- ``close`` verifies the fill.
+    """
+
+    def __init__(self, path: str, num_nodes: int, num_edges: int,
+                 undirected: bool = False):
+        self.path = path
+        self.num_nodes = int(num_nodes)
+        self.num_edges = int(num_edges)
+        self._filled = 0
+        with open(path, "wb") as f:
+            write_binary_header(f, num_nodes, num_edges, undirected)
+            f.truncate(_geeb_offsets(self.num_edges)[2] + 4 * self.num_edges)
+        so, do, wo = _geeb_offsets(self.num_edges)
+        shape = (self.num_edges,)
+        if self.num_edges == 0:            # mmap cannot map an empty range
+            self._src = np.empty(shape, np.int32)
+            self._dst = np.empty(shape, np.int32)
+            self._w = np.empty(shape, np.float32)
+        else:
+            self._src = np.memmap(path, np.int32, "r+", so, shape)
+            self._dst = np.memmap(path, np.int32, "r+", do, shape)
+            self._w = np.memmap(path, np.float32, "r+", wo, shape)
+
+    def append(self, src, dst, weight=None) -> None:
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        weight = (np.ones(src.shape, np.float32) if weight is None
+                  else np.asarray(weight, np.float32))
+        lo, hi = self._filled, self._filled + src.shape[0]
+        if hi > self.num_edges:
+            raise ValueError(f"{self.path}: writing {hi} edges into a file "
+                             f"sized for {self.num_edges}")
+        self._src[lo:hi] = src
+        self._dst[lo:hi] = dst
+        self._w[lo:hi] = weight
+        self._filled = hi
+
+    def close(self) -> None:
+        if self._filled != self.num_edges:
+            raise ValueError(f"{self.path}: wrote {self._filled} of "
+                             f"{self.num_edges} declared edges")
+        for m in (self._src, self._dst, self._w):
+            if isinstance(m, np.memmap):
+                m.flush()
+        self._src = self._dst = self._w = None
+
+    def __enter__(self) -> "BinaryEdgeWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.close()
+
+
+def write_binary(path: str, src, dst, weight, num_nodes: int,
+                 undirected: bool = False) -> str:
+    """One-shot in-memory arrays -> ``.geeb``."""
+    src = np.asarray(src, np.int32)
+    with BinaryEdgeWriter(path, num_nodes, src.shape[0], undirected) as w:
+        w.append(src, dst, weight)
+    return path
+
+
+def open_binary(path: str, chunk_edges: int = DEFAULT_CHUNK_EDGES,
+                undirected: bool | None = None) -> ChunkedEdgeList:
+    """Memory-map a ``.geeb`` file; O(1) host memory until chunks are read."""
+    n, e, und = read_binary_header(path)
+    so, do, wo = _geeb_offsets(e)
+    shape = (e,)
+    if e == 0:                             # mmap cannot map an empty range
+        src = np.empty(shape, np.int32)
+        dst = np.empty(shape, np.int32)
+        w = np.empty(shape, np.float32)
+    else:
+        src = np.memmap(path, np.int32, "r", so, shape)
+        dst = np.memmap(path, np.int32, "r", do, shape)
+        w = np.memmap(path, np.float32, "r", wo, shape)
+    return ChunkedEdgeList(
+        src=src, dst=dst, weight=w,
+        num_nodes=n, chunk_edges=chunk_edges,
+        undirected=und if undirected is None else undirected)
+
+
+# ---------------------------------------------------------------------------
+# .npz (numpy archive; convenience, not mmap-able)
+# ---------------------------------------------------------------------------
+
+def write_npz(path: str, src, dst, weight, num_nodes: int,
+              undirected: bool = False) -> str:
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    weight = (np.ones(src.shape, np.float32) if weight is None
+              else np.asarray(weight, np.float32))
+    np.savez(path, src=src, dst=dst, weight=weight,
+             num_nodes=np.int64(num_nodes), undirected=np.bool_(undirected))
+    return path
+
+
+def open_npz(path: str, chunk_edges: int = DEFAULT_CHUNK_EDGES,
+             undirected: bool | None = None) -> ChunkedEdgeList:
+    with np.load(path) as z:
+        src = np.asarray(z["src"], np.int32)
+        dst = np.asarray(z["dst"], np.int32)
+        weight = (np.asarray(z["weight"], np.float32) if "weight" in z
+                  else np.ones(src.shape, np.float32))
+        n = int(z["num_nodes"]) if "num_nodes" in z else (
+            int(max(src.max(initial=-1), dst.max(initial=-1))) + 1)
+        und = bool(z["undirected"]) if "undirected" in z else False
+    return ChunkedEdgeList(src=src, dst=dst, weight=weight, num_nodes=n,
+                           chunk_edges=chunk_edges,
+                           undirected=und if undirected is None else undirected)
+
+
+# ---------------------------------------------------------------------------
+# SNAP-style text
+# ---------------------------------------------------------------------------
+
+def iter_text_chunks(path: str, chunk_edges: int = DEFAULT_CHUNK_EDGES,
+                     index_base: int = 0):
+    """Stream ``(src, dst, weight)`` numpy triples of <= chunk_edges rows.
+
+    Skips blank lines and ``#``/``%``/``//`` comment or header lines;
+    accepts 2 (unweighted) or 3+ (weighted) whitespace-separated columns;
+    subtracts ``index_base`` (1 for 1-indexed SNAP exports).
+    """
+    srcs: list = []
+    dsts: list = []
+    ws: list = []
+
+    def flush():
+        s = np.asarray(srcs, np.int64) - index_base
+        d = np.asarray(dsts, np.int64) - index_base
+        if s.size and (s.min() < 0 or d.min() < 0):
+            raise ValueError(f"{path}: negative node id after subtracting "
+                             f"index_base={index_base}")
+        return s.astype(np.int32), d.astype(np.int32), np.asarray(ws, np.float32)
+
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith(_COMMENT_PREFIXES):
+                continue
+            parts = line.replace(",", " ").split()
+            srcs.append(int(parts[0]))
+            dsts.append(int(parts[1]))
+            ws.append(float(parts[2]) if len(parts) > 2 else 1.0)
+            if len(srcs) == chunk_edges:
+                yield flush()
+                srcs, dsts, ws = [], [], []
+    if srcs:
+        yield flush()
+
+
+def scan_text(path: str, index_base: int = 0) -> Tuple[int, int]:
+    """Streaming pass over a text edge file: ``(num_edges, max_node_id)``."""
+    e, mx = 0, -1
+    for s, d, _ in iter_text_chunks(path, index_base=index_base):
+        e += s.shape[0]
+        if s.size:
+            mx = max(mx, int(s.max()), int(d.max()))
+    return e, mx
+
+
+def text_to_binary(path: str, out: str,
+                   chunk_edges: int = DEFAULT_CHUNK_EDGES,
+                   index_base: int = 0, num_nodes: int | None = None,
+                   undirected: bool = True) -> str:
+    """Convert SNAP text -> ``.geeb`` in two streaming passes (count, fill).
+
+    Peak memory is O(chunk_edges) regardless of file size.
+    """
+    e, mx = scan_text(path, index_base=index_base)
+    n = max(mx + 1, 0 if num_nodes is None else int(num_nodes))
+    with BinaryEdgeWriter(out, n, e, undirected) as w:
+        for s, d, wt in iter_text_chunks(path, chunk_edges, index_base):
+            w.append(s, d, wt)
+    return out
+
+
+def write_text(path: str, chunked: ChunkedEdgeList) -> str:
+    """Stream a ``ChunkedEdgeList`` out as SNAP-style text."""
+    with open(path, "w") as f:
+        f.write(f"# nodes {chunked.num_nodes} edges {chunked.num_edges} "
+                f"undirected {int(chunked.undirected)}\n")
+        for ch in chunked.chunks():
+            e = ch.num_edges
+            s = np.asarray(ch.src)[:e]
+            d = np.asarray(ch.dst)[:e]
+            w = np.asarray(ch.weight)[:e]
+            f.writelines(f"{si} {di} {wi:.9g}\n"   # .9g round-trips float32
+                         for si, di, wi in zip(s, d, w))
+    return path
+
+
+def _text_header_hint(path: str) -> dict:
+    """Parse the ``# nodes N edges E undirected U`` hint ``write_text``
+    emits, so text round-trips keep isolated trailing nodes and the
+    undirected flag.  Foreign SNAP files without it just get {}."""
+    with open(path) as f:
+        first = f.readline().split()
+    if first[:2] == ["#", "nodes"] and len(first) >= 7:
+        try:
+            return {"num_nodes": int(first[2]),
+                    "undirected": bool(int(first[6]))}
+        except ValueError:
+            return {}
+    return {}
+
+
+def open_text(path: str, chunk_edges: int = DEFAULT_CHUNK_EDGES,
+              index_base: int = 0, num_nodes: int | None = None,
+              undirected: bool | None = None,
+              cache_binary: bool = True) -> ChunkedEdgeList:
+    """Open SNAP text for chunked reading.
+
+    Text cannot be random-accessed per chunk, so by default the file is
+    converted once to a ``<path>.geeb`` sidecar (refreshed when the text
+    is newer) and that is memory-mapped -- each later open is O(1).
+    ``cache_binary=False`` parses into host memory instead (no sidecar;
+    not out-of-core).
+    """
+    hint = _text_header_hint(path)
+    und = hint.get("undirected", True) if undirected is None else undirected
+    if cache_binary:
+        # The sidecar bakes in only properties of the file itself (the
+        # parsed ids under index_base, the header hint); caller overrides
+        # (num_nodes, undirected) are applied at open time below, so they
+        # can vary between opens without poisoning the cache.
+        sidecar = path + (f".ib{index_base}.geeb" if index_base else ".geeb")
+        if (not os.path.exists(sidecar)
+                or os.path.getmtime(sidecar) < os.path.getmtime(path)):
+            text_to_binary(path, sidecar, chunk_edges=chunk_edges,
+                           index_base=index_base,
+                           num_nodes=hint.get("num_nodes"),
+                           undirected=hint.get("undirected", True))
+        out = open_binary(sidecar, chunk_edges, undirected=und)
+        if num_nodes is not None and num_nodes > out.num_nodes:
+            out = dataclasses.replace(out, num_nodes=int(num_nodes))
+        return out
+    parts = list(iter_text_chunks(path, chunk_edges, index_base))
+    src = (np.concatenate([p[0] for p in parts]) if parts
+           else np.empty(0, np.int32))
+    dst = (np.concatenate([p[1] for p in parts]) if parts
+           else np.empty(0, np.int32))
+    w = (np.concatenate([p[2] for p in parts]) if parts
+         else np.empty(0, np.float32))
+    n = max(int(src.max(initial=-1)), int(dst.max(initial=-1))) + 1
+    n = max(n, hint.get("num_nodes") or 0,
+            0 if num_nodes is None else int(num_nodes))
+    return ChunkedEdgeList(src=src, dst=dst, weight=w, num_nodes=n,
+                           chunk_edges=chunk_edges, undirected=und)
+
+
+# ---------------------------------------------------------------------------
+# front door + converters + labels sidecar
+# ---------------------------------------------------------------------------
+
+def open_edge_list(path: str, chunk_edges: int = DEFAULT_CHUNK_EDGES,
+                   index_base: int = 0, num_nodes: int | None = None,
+                   undirected: bool | None = None,
+                   cache_binary: bool = True) -> ChunkedEdgeList:
+    """Open any supported edge file as a ``ChunkedEdgeList``.
+
+    Dispatch is by suffix: ``.geeb`` memory-maps, ``.npz`` loads the
+    archive, text converts to a mmap sidecar (see ``open_text``).
+    ``undirected=None`` defers to the stored flag (text defaults True).
+    """
+    suffix = os.path.splitext(path)[1].lower()
+    if suffix == ".geeb":
+        out = open_binary(path, chunk_edges, undirected=undirected)
+    elif suffix == ".npz":
+        out = open_npz(path, chunk_edges, undirected=undirected)
+    elif suffix in TEXT_SUFFIXES:
+        out = open_text(path, chunk_edges, index_base=index_base,
+                        num_nodes=num_nodes, undirected=undirected,
+                        cache_binary=cache_binary)
+    else:
+        raise ValueError(f"unsupported edge-file suffix {suffix!r} ({path}); "
+                         f"expected .geeb, .npz, or one of {TEXT_SUFFIXES}")
+    if num_nodes is not None and num_nodes > out.num_nodes:
+        out = dataclasses.replace(out, num_nodes=int(num_nodes))
+    return out
+
+
+def save_edge_list(path: str, chunked: ChunkedEdgeList) -> str:
+    """Write a ``ChunkedEdgeList`` to any supported format (by suffix)."""
+    suffix = os.path.splitext(path)[1].lower()
+    if suffix == ".geeb":
+        with BinaryEdgeWriter(path, chunked.num_nodes, chunked.num_edges,
+                              chunked.undirected) as w:
+            for ch in chunked.chunks():
+                e = ch.num_edges
+                w.append(np.asarray(ch.src)[:e], np.asarray(ch.dst)[:e],
+                         np.asarray(ch.weight)[:e])
+        return path
+    if suffix == ".npz":
+        return write_npz(path, np.asarray(chunked.src),
+                         np.asarray(chunked.dst), np.asarray(chunked.weight),
+                         chunked.num_nodes, chunked.undirected)
+    if suffix in TEXT_SUFFIXES:
+        return write_text(path, chunked)
+    raise ValueError(f"unsupported edge-file suffix {suffix!r} ({path})")
+
+
+def convert(src_path: str, dst_path: str,
+            chunk_edges: int = DEFAULT_CHUNK_EDGES,
+            index_base: int = 0) -> str:
+    """Convert between any two supported formats; streams when the source
+    is text or ``.geeb`` (``.npz`` sources load into memory)."""
+    src_suffix = os.path.splitext(src_path)[1].lower()
+    if (src_suffix in TEXT_SUFFIXES
+            and os.path.splitext(dst_path)[1].lower() == ".geeb"):
+        hint = _text_header_hint(src_path)
+        return text_to_binary(src_path, dst_path, chunk_edges=chunk_edges,
+                              index_base=index_base,
+                              num_nodes=hint.get("num_nodes"),
+                              undirected=hint.get("undirected", True))
+    return save_edge_list(dst_path, open_edge_list(
+        src_path, chunk_edges=chunk_edges, index_base=index_base))
+
+
+def labels_path(path: str) -> str:
+    """Canonical labels-sidecar filename for an edge file."""
+    return path + ".labels.npy"
+
+
+def save_labels(path: str, labels) -> str:
+    """Write the int32 labels sidecar next to edge file ``path``."""
+    out = labels_path(path)
+    np.save(out, np.asarray(labels, np.int32))
+    return out
+
+
+def load_labels(path: str) -> np.ndarray | None:
+    """Read the labels sidecar for edge file ``path``, or None if absent."""
+    p = labels_path(path)
+    return np.load(p).astype(np.int32) if os.path.exists(p) else None

@@ -3,6 +3,8 @@
   PYTHONPATH=src python -m repro.launch.gee_run --sbm 10000 --backend sparse_jax \
       --lap --diag --cor
   PYTHONPATH=src python -m repro.launch.gee_run --dataset citeseer --compare
+  PYTHONPATH=src python -m repro.launch.gee_run --edge-file graph.geeb \
+      --chunk-edges 1048576 --lap --diag --cor   # out-of-core streaming
 """
 
 from __future__ import annotations
@@ -35,10 +37,21 @@ def main(argv=None):
     ap.add_argument("--sbm", type=int, default=None,
                     help="SBM node count (paper's simulation)")
     ap.add_argument("--dataset", default=None,
-                    help=f"one of {sorted(TABLE2)}")
+                    help=f"one of {sorted(TABLE2)}, or a path to an edge "
+                         f"file (.geeb/.npz/.txt)")
+    ap.add_argument("--edge-file", default=None,
+                    help="embed an on-disk edge list out-of-core (any "
+                         "repro.graph.io format); labels come from the "
+                         "<file>.labels.npy sidecar or --classes random")
+    ap.add_argument("--chunk-edges", type=int, default=None,
+                    help="streaming window for --edge-file / chunked "
+                         "backend (default 1M edges = 12 MB/chunk)")
+    ap.add_argument("--classes", type=int, default=5,
+                    help="synthetic label count when --edge-file has no "
+                         "labels sidecar")
     ap.add_argument("--backend", default="sparse_jax",
                     choices=("sparse_jax", "dense_jax", "scipy",
-                             "python_loop", "pallas", "auto"))
+                             "python_loop", "pallas", "chunked", "auto"))
     ap.add_argument("--lap", action="store_true")
     ap.add_argument("--diag", action="store_true")
     ap.add_argument("--cor", action="store_true")
@@ -46,6 +59,46 @@ def main(argv=None):
                     help="time all backends")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    opts = GEEOptions(laplacian=args.lap, diag_aug=args.diag,
+                      correlation=args.cor)
+
+    if args.edge_file:
+        # Out-of-core path: the edge list stays on disk, chunks stream
+        # through the two-pass accumulator (repro.core.chunked).
+        from repro.core.chunked import gee_chunked
+        from repro.graph.io import (DEFAULT_CHUNK_EDGES, load_labels,
+                                    open_edge_list)
+
+        if args.compare:
+            print("  (--compare ignored with --edge-file: the on-disk "
+                  "path always streams through the chunked backend)")
+        chunk = args.chunk_edges or DEFAULT_CHUNK_EDGES
+        chunked = open_edge_list(args.edge_file, chunk_edges=chunk)
+        labels = load_labels(args.edge_file)
+        if labels is None:
+            labels = np.random.default_rng(args.seed).integers(
+                0, args.classes, chunked.num_nodes).astype(np.int32)
+            print(f"  (no labels sidecar; random K={args.classes} labels)")
+            k = args.classes
+        else:
+            # all-unknown (-1) sidecars still get K=1 (a zero embedding),
+            # not a zero-width Z
+            k = max(int(labels.max()) + 1, 1)
+        print(f"{args.edge_file}: N={chunked.num_nodes} "
+              f"E={chunked.num_edges}"
+              f"{' (undirected storage)' if chunked.undirected else ''} "
+              f"K={k} chunks={chunked.num_chunks}"
+              f"x{chunked.effective_chunk_edges} "
+              f"[{opts.tag()}]")
+        fn = lambda: gee_chunked(chunked, labels, k, opts)
+        dt = _time(fn)
+        z = np.asarray(fn())
+        eps = (2 if chunked.undirected else 1) * chunked.num_edges / dt
+        print(f"  chunked     : {dt*1e3:9.1f} ms   {eps/1e6:8.2f} M edges/s"
+              f"   Z[{z.shape[0]}x{z.shape[1]}] "
+              f"norm {np.linalg.norm(z):.4f}")
+        return
 
     if args.sbm:
         s = sample_sbm(args.sbm, seed=args.seed)
@@ -55,13 +108,11 @@ def main(argv=None):
         ds = load(args.dataset or "citeseer", seed=args.seed)
         edges, labels, k = ds.edges, ds.labels, ds.spec.num_classes
         name = ds.spec.name
-    opts = GEEOptions(laplacian=args.lap, diag_aug=args.diag,
-                      correlation=args.cor)
     print(f"{name}: N={edges.num_nodes} E={edges.num_edges//2} K={k} "
           f"[{opts.tag()}]")
 
-    backends = (("sparse_jax", "pallas", "auto", "dense_jax", "scipy",
-                 "python_loop")
+    backends = (("sparse_jax", "chunked", "pallas", "auto", "dense_jax",
+                 "scipy", "python_loop")
                 if args.compare else (args.backend,))
     for b in backends:
         if b == "python_loop" and edges.num_edges > 3_000_000:
@@ -75,6 +126,11 @@ def main(argv=None):
         if b == "pallas":
             from repro.kernels.ops import gee_pallas
             fn = lambda: gee_pallas(edges, labels, k, opts)
+        elif b == "chunked" and args.chunk_edges:
+            from repro.core.chunked import gee_chunked
+            from repro.graph.io import ChunkedEdgeList
+            ch = ChunkedEdgeList.from_edge_list(edges, args.chunk_edges)
+            fn = lambda: gee_chunked(ch, labels, k, opts)
         else:
             fn = lambda: gee(edges, labels, k, opts, backend=b)
         dt = _time(fn)

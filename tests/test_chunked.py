@@ -1,0 +1,163 @@
+"""Out-of-core GEE correctness: the chunked two-pass pipeline must be
+exact (<= 1e-5 max-abs) against in-memory ``gee_sparse_jax`` under all 8
+option settings, from any source (in-memory wrap, undirected storage,
+every on-disk format), for any chunk size."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.api import GEEEmbedder
+from repro.core.chunked import gee_chunked, gee_chunked_from_file
+from repro.core.gee import (ALL_OPTION_SETTINGS, GEEOptions, gee,
+                            gee_sparse_jax)
+from repro.graph.containers import edge_list_from_numpy, symmetrize
+from repro.graph.datasets import DatasetSpec, load, synth_to_disk
+from repro.graph.io import ChunkedEdgeList, save_edge_list, save_labels
+
+K = 4
+
+
+def _graph(seed=0, n=250, e=1000):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = (src + 1 + rng.integers(0, n - 1, e)).astype(np.int32) % n
+    w = (rng.random(e) + 0.1).astype(np.float32)
+    labels = rng.integers(0, K, n).astype(np.int32)
+    labels[::17] = -1                      # unknown-label rows ride along
+    return src, dst, w, labels, n
+
+
+@pytest.mark.parametrize("opts", ALL_OPTION_SETTINGS,
+                         ids=[o.tag() for o in ALL_OPTION_SETTINGS])
+def test_chunked_exact_all_settings(opts):
+    src, dst, w, labels, n = _graph()
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    ref = np.asarray(gee_sparse_jax(edges, jnp.asarray(labels), K, opts))
+
+    # directed in-memory wrap, chunk size that does not divide E
+    z_dir = gee_chunked(ChunkedEdgeList.from_edge_list(edges, 251),
+                        labels, K, opts)
+    np.testing.assert_allclose(np.asarray(z_dir), ref, atol=1e-5)
+
+    # undirected storage (one entry per edge), folded both ways on the fly
+    und = ChunkedEdgeList(src=src, dst=dst, weight=w, num_nodes=n,
+                          chunk_edges=177, undirected=True)
+    z_und = gee_chunked(und, labels, K, opts)
+    np.testing.assert_allclose(np.asarray(z_und), ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 1000, 10**6])
+def test_chunk_size_never_changes_the_answer(chunk):
+    src, dst, w, labels, n = _graph(seed=1, e=300)
+    opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    ref = np.asarray(gee_sparse_jax(edges, jnp.asarray(labels), K, opts))
+    z = gee_chunked(ChunkedEdgeList.from_edge_list(edges, chunk),
+                    labels, K, opts)
+    np.testing.assert_allclose(np.asarray(z), ref, atol=1e-5)
+
+
+def test_self_loops_in_undirected_storage_counted_once():
+    # loops must not double when the reader folds both directions
+    src = np.array([0, 1, 2], np.int32)
+    dst = np.array([1, 1, 0], np.int32)        # (1, 1) is a self loop
+    w = np.ones(3, np.float32)
+    labels = np.array([0, 1, 0], np.int32)
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, 3))
+    und = ChunkedEdgeList(src=src, dst=dst, weight=w, num_nodes=3,
+                          chunk_edges=2, undirected=True)
+    for opts in ALL_OPTION_SETTINGS:
+        ref = np.asarray(gee_sparse_jax(edges, jnp.asarray(labels), 2, opts))
+        z = gee_chunked(und, labels, 2, opts)
+        np.testing.assert_allclose(np.asarray(z), ref, atol=1e-5,
+                                   err_msg=opts.tag())
+
+
+def test_gee_dispatch_chunked_backend():
+    src, dst, w, labels, n = _graph(seed=2, e=400)
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    opts = GEEOptions(laplacian=True, correlation=True)
+    ref = np.asarray(gee(edges, labels, K, opts, backend="sparse_jax"))
+    z = np.asarray(gee(edges, labels, K, opts, backend="chunked"))
+    np.testing.assert_allclose(z, ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("fmt", ["geeb", "npz", "txt"])
+def test_file_based_embedding_every_format(tmp_path, fmt):
+    src, dst, w, labels, n = _graph(seed=3, e=500)
+    opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    ref = np.asarray(gee_sparse_jax(edges, jnp.asarray(labels), K, opts))
+
+    path = str(tmp_path / f"g.{fmt}")
+    save_edge_list(path, ChunkedEdgeList(
+        src=src, dst=dst, weight=w, num_nodes=n, undirected=True))
+    save_labels(path, labels)
+
+    z = gee_chunked_from_file(path, opts=opts, chunk_edges=123)
+    np.testing.assert_allclose(np.asarray(z), ref, atol=1e-5)
+
+    emb = GEEEmbedder(num_classes=K, options=opts, chunk_edges=123)
+    z2 = np.asarray(emb.fit_transform_file(path))
+    np.testing.assert_allclose(z2, ref, atol=1e-5)
+    # downstream helpers work off the streamed fit
+    assert np.asarray(emb.predict()).shape == (n,)
+    assert emb.current_edges().num_edges == edges.num_edges
+
+
+def test_fit_file_requires_labels_without_sidecar(tmp_path):
+    src, dst, w, labels, n = _graph(seed=4, e=100)
+    path = str(tmp_path / "nolabels.geeb")
+    save_edge_list(path, ChunkedEdgeList(
+        src=src, dst=dst, weight=w, num_nodes=n, undirected=True))
+    emb = GEEEmbedder(num_classes=K)
+    with pytest.raises(ValueError, match="no labels"):
+        emb.fit_file(path)
+    z = np.asarray(emb.fit_transform_file(path, labels))   # explicit labels
+    assert z.shape == (n, K)
+
+
+def test_partial_fit_after_fit_file_raises(tmp_path):
+    from repro.graph.delta import edge_delta_from_numpy
+
+    src, dst, w, labels, n = _graph(seed=5, e=100)
+    path = str(tmp_path / "stream.geeb")
+    save_edge_list(path, ChunkedEdgeList(
+        src=src, dst=dst, weight=w, num_nodes=n, undirected=True))
+    save_labels(path, labels)
+    emb = GEEEmbedder(num_classes=K).fit_file(path)
+    with pytest.raises(RuntimeError, match="file-backed"):
+        emb.partial_fit(edge_delta_from_numpy(np.array([0]), np.array([1])))
+
+
+def test_synth_to_disk_load_and_stream_agree(tmp_path):
+    spec = DatasetSpec("synth-chunk-test", 300, 1500, 3)
+    path = synth_to_disk(spec, str(tmp_path / "synth.geeb"), seed=7,
+                         chunk_edges=400)
+    ds = load(path)                          # path routes through the io layer
+    assert ds.spec.num_nodes == 300
+    assert ds.spec.num_edges == 1500
+    assert ds.spec.num_classes == 3
+    assert ds.edges.num_edges == 3000        # symmetrized, loop-free sampler
+    opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+    ref = np.asarray(gee_sparse_jax(ds.edges, jnp.asarray(ds.labels), 3,
+                                    opts))
+    z = gee_chunked_from_file(path, opts=opts, chunk_edges=777)
+    np.testing.assert_allclose(np.asarray(z), ref, atol=1e-5)
+
+
+def test_load_still_resolves_table2_names():
+    ds = load("citeseer", seed=0)
+    assert ds.spec.num_nodes == 3_327
+    with pytest.raises(KeyError, match="unknown dataset"):
+        load("not-a-dataset")
+
+
+def test_registry_name_wins_over_stray_file(tmp_path, monkeypatch):
+    # a file or directory named after a Table 2 dataset must not shadow it
+    monkeypatch.chdir(tmp_path)
+    (tmp_path / "cora").mkdir()
+    ds = load("cora", seed=0)
+    assert ds.spec.num_nodes == 2_708

@@ -1,0 +1,56 @@
+"""Docs cannot rot: the link/symbol checker passes, and the cheap
+doctest-bearing modules execute their examples.  (CI's docs job runs the
+full ``--doctest-modules`` sweep; here we keep the tier-1 cost low.)"""
+
+import doctest
+import importlib.util
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_checker():
+    path = os.path.join(REPO, "docs", "check_links.py")
+    spec = importlib.util.spec_from_file_location("check_links", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_links_and_symbol_refs_resolve(capsys):
+    checker = _load_checker()
+    rc = checker.main()
+    out = capsys.readouterr().out
+    assert rc == 0, f"docs references broken:\n{out}"
+
+
+def test_checker_slug_matches_github_convention():
+    checker = _load_checker()
+    assert checker.github_slug("## Streaming API".lstrip("# ")) \
+        == "streaming-api"
+    assert checker.github_slug("The `Z = A @ W` implementations (Table 1)") \
+        == "the-z--a--w-implementations-table-1"
+
+
+def test_checker_catches_a_missing_symbol(tmp_path):
+    checker = _load_checker()
+    py = tmp_path / "mod.py"
+    py.write_text("def real_fn():\n    pass\n\nCONST = 3\n")
+    assert checker.symbol_defined(str(py), "real_fn")
+    assert checker.symbol_defined(str(py), "CONST")
+    assert not checker.symbol_defined(str(py), "imaginary_fn")
+
+
+def test_public_api_doctests_execute():
+    import repro.graph.delta as delta
+    import repro.graph.io as gio
+
+    for mod in (delta, gio):
+        result = doctest.testmod(mod, verbose=False)
+        assert result.attempted > 0, f"{mod.__name__} lost its doctests"
+        assert result.failed == 0, f"{mod.__name__} doctests failed"
+
+
+if __name__ == "__main__":
+    sys.exit(os.system(f"{sys.executable} -m pytest -q {__file__}"))

@@ -1,0 +1,235 @@
+"""IO-layer edge cases: the on-disk formats, the chunked reader, and the
+converters (repro/graph/io.py).  The tentpole contract under test: every
+format round-trips exactly, chunk iteration is shape-stable no matter how
+chunk_edges divides E, and SNAP quirks (comments, 1-indexing) parse."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.graph.io import (ChunkedEdgeList, BinaryEdgeWriter, convert,
+                            labels_path, load_labels, open_edge_list,
+                            read_binary_header, save_edge_list, save_labels,
+                            scan_text, write_binary)
+
+
+def _random_chunked(rng, n=120, e=700, undirected=True, chunk=97):
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = (src + 1 + rng.integers(0, n - 1, e)).astype(np.int32) % n
+    w = (rng.random(e) + 0.1).astype(np.float32)
+    return ChunkedEdgeList(src=src, dst=dst, weight=w, num_nodes=n,
+                           chunk_edges=chunk, undirected=undirected)
+
+
+# ---------------------------------------------------------------------------
+# SNAP text parsing quirks
+# ---------------------------------------------------------------------------
+
+def test_text_comments_headers_and_blank_lines(tmp_path):
+    p = str(tmp_path / "snap.txt")
+    with open(p, "w") as f:
+        f.write("# Directed graph: example\n"
+                "% matrix-market style comment\n"
+                "// c-style comment\n"
+                "\n"
+                "# FromNodeId\tToNodeId\n"
+                "0\t1\n"
+                "1 2\n"
+                "\n"
+                "2 0\n")
+    ch = open_edge_list(p, chunk_edges=10)
+    assert ch.num_edges == 3
+    assert ch.num_nodes == 3
+    np.testing.assert_array_equal(np.asarray(ch.src), [0, 1, 2])
+    np.testing.assert_array_equal(np.asarray(ch.dst), [1, 2, 0])
+
+
+def test_text_one_indexed_nodes(tmp_path):
+    p = str(tmp_path / "one_indexed.txt")
+    with open(p, "w") as f:
+        f.write("1 2\n2 3\n3 1\n")
+    ch = open_edge_list(p, index_base=1, chunk_edges=10)
+    assert ch.num_nodes == 3
+    np.testing.assert_array_equal(np.asarray(ch.src), [0, 1, 2])
+    # a 0-indexed read of the same file must not reuse the index_base=1
+    # sidecar: it sees node ids up to 3
+    ch0 = open_edge_list(p, chunk_edges=10)
+    assert ch0.num_nodes == 4
+
+
+def test_num_nodes_override_does_not_poison_sidecar_cache(tmp_path):
+    p = str(tmp_path / "iso.txt")
+    with open(p, "w") as f:
+        f.write("0 1\n1 2\n")
+    # override applies at open time (isolated trailing nodes kept) ...
+    assert open_edge_list(p, num_nodes=10).num_nodes == 10
+    # ... but is not baked into the cached sidecar
+    assert open_edge_list(p).num_nodes == 3
+    assert open_edge_list(p, num_nodes=7).num_nodes == 7
+    # the same override works on binary sources
+    g = str(tmp_path / "iso.geeb")
+    write_binary(g, np.array([0], np.int32), np.array([1], np.int32),
+                 None, num_nodes=2)
+    assert open_edge_list(g, num_nodes=5).num_nodes == 5
+
+
+def test_text_negative_after_index_base_raises(tmp_path):
+    p = str(tmp_path / "bad.txt")
+    with open(p, "w") as f:
+        f.write("0 1\n")
+    with pytest.raises(ValueError, match="negative node id"):
+        scan_text(p, index_base=1)
+
+
+def test_text_weighted_column_and_scan(tmp_path):
+    p = str(tmp_path / "weighted.tsv")
+    with open(p, "w") as f:
+        f.write("0\t1\t0.5\n1\t2\t2.25\n")
+    e, mx = scan_text(p)
+    assert (e, mx) == (2, 2)
+    ch = open_edge_list(p, chunk_edges=10)
+    np.testing.assert_allclose(np.asarray(ch.weight), [0.5, 2.25])
+
+
+def test_text_sidecar_cache_refreshes_on_newer_text(tmp_path):
+    p = str(tmp_path / "cached.txt")
+    with open(p, "w") as f:
+        f.write("0 1\n")
+    assert open_edge_list(p).num_edges == 1
+    assert os.path.exists(p + ".geeb")
+    with open(p, "w") as f:
+        f.write("0 1\n1 2\n")
+    os.utime(p, (os.path.getmtime(p + ".geeb") + 5,) * 2)
+    assert open_edge_list(p).num_edges == 2
+
+
+# ---------------------------------------------------------------------------
+# chunk iteration: shapes and tails
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,chunk", [
+    (700, 97),      # does not divide E: ragged tail chunk
+    (700, 100),     # divides E exactly: no tail padding
+    (700, 7000),    # single chunk larger than E: clamped, no waste
+    (1, 64),        # single edge
+])
+def test_chunks_are_shape_stable_and_cover_all_edges(e, chunk):
+    rng = np.random.default_rng(0)
+    ch = _random_chunked(rng, e=e, chunk=chunk)
+    chunks = list(ch.chunks())
+    assert len(chunks) == ch.num_chunks
+    eff = ch.effective_chunk_edges
+    assert eff <= max(e, 1)
+    # stable shapes: every chunk padded to the same width
+    assert {c.padded_size for c in chunks} == {eff}
+    assert sum(c.num_edges for c in chunks) == e
+    # padding slots carry weight 0 (exact no-ops)
+    for c in chunks:
+        np.testing.assert_array_equal(
+            np.asarray(c.weight)[c.num_edges:], 0.0)
+    # concatenated valid prefixes reproduce the stored arrays
+    src_cat = np.concatenate([np.asarray(c.src)[:c.num_edges]
+                              for c in chunks])
+    np.testing.assert_array_equal(src_cat, np.asarray(ch.src))
+
+
+def test_empty_graph_yields_one_padded_noop_chunk(tmp_path):
+    p = str(tmp_path / "empty.geeb")
+    write_binary(p, np.empty(0, np.int32), np.empty(0, np.int32), None,
+                 num_nodes=5)
+    ch = open_edge_list(p, chunk_edges=8)
+    assert (ch.num_edges, ch.num_chunks) == (0, 1)
+    (chunk,) = list(ch.chunks())
+    assert chunk.num_edges == 0 and chunk.padded_size == 1
+    np.testing.assert_array_equal(np.asarray(chunk.weight), 0.0)
+
+
+def test_to_edge_list_symmetrizes_undirected_storage():
+    rng = np.random.default_rng(1)
+    ch = _random_chunked(rng, e=50, undirected=True)
+    edges = ch.to_edge_list()
+    assert edges.num_edges == 100          # no self loops in the sampler
+    directed = _random_chunked(rng, e=50, undirected=False)
+    assert directed.to_edge_list().num_edges == 50
+
+
+# ---------------------------------------------------------------------------
+# formats: header, round-trips, converters
+# ---------------------------------------------------------------------------
+
+def test_binary_header_and_flags(tmp_path):
+    p = str(tmp_path / "h.geeb")
+    write_binary(p, np.array([0, 1], np.int32), np.array([1, 2], np.int32),
+                 np.array([1.0, 2.0], np.float32), num_nodes=7,
+                 undirected=True)
+    assert read_binary_header(p) == (7, 2, True)
+    with pytest.raises(ValueError, match="not a .geeb"):
+        bad = str(tmp_path / "bad.geeb")
+        with open(bad, "wb") as f:
+            f.write(b"\0" * 64)
+        read_binary_header(bad)
+
+
+def test_binary_writer_enforces_declared_edge_count(tmp_path):
+    p = str(tmp_path / "short.geeb")
+    w = BinaryEdgeWriter(p, num_nodes=4, num_edges=3)
+    w.append(np.array([0], np.int32), np.array([1], np.int32))
+    with pytest.raises(ValueError, match="wrote 1 of 3"):
+        w.close()
+    w2 = BinaryEdgeWriter(p, num_nodes=4, num_edges=1)
+    with pytest.raises(ValueError, match="into a file sized for"):
+        w2.append(np.array([0, 1], np.int32), np.array([1, 2], np.int32))
+
+
+@pytest.mark.parametrize("fmt", ["geeb", "npz", "txt"])
+def test_round_trip_each_format(tmp_path, fmt):
+    rng = np.random.default_rng(2)
+    ch = _random_chunked(rng, e=230, chunk=64, undirected=True)
+    p = str(tmp_path / f"rt.{fmt}")
+    save_edge_list(p, ch)
+    back = open_edge_list(p, chunk_edges=33)
+    assert back.num_nodes == ch.num_nodes
+    assert back.num_edges == ch.num_edges
+    assert back.undirected == ch.undirected
+    np.testing.assert_array_equal(np.asarray(back.src), np.asarray(ch.src))
+    np.testing.assert_array_equal(np.asarray(back.dst), np.asarray(ch.dst))
+    np.testing.assert_array_equal(np.asarray(back.weight),
+                                  np.asarray(ch.weight))
+
+
+def test_convert_chain_across_all_three_formats(tmp_path):
+    rng = np.random.default_rng(3)
+    ch = _random_chunked(rng, e=150, chunk=41, undirected=False)
+    p0 = str(tmp_path / "a.geeb")
+    save_edge_list(p0, ch)
+    p1 = convert(p0, str(tmp_path / "b.npz"), chunk_edges=37)
+    p2 = convert(p1, str(tmp_path / "c.txt"), chunk_edges=37)
+    p3 = convert(p2, str(tmp_path / "d.geeb"), chunk_edges=37)
+    end = open_edge_list(p3)
+    assert end.num_nodes == ch.num_nodes
+    assert end.undirected == ch.undirected
+    np.testing.assert_array_equal(np.asarray(end.src), np.asarray(ch.src))
+    np.testing.assert_array_equal(np.asarray(end.weight),
+                                  np.asarray(ch.weight))
+
+
+def test_unknown_suffix_rejected(tmp_path):
+    with pytest.raises(ValueError, match="unsupported edge-file suffix"):
+        open_edge_list(str(tmp_path / "graph.parquet"))
+
+
+# ---------------------------------------------------------------------------
+# labels sidecar
+# ---------------------------------------------------------------------------
+
+def test_labels_sidecar_round_trip(tmp_path):
+    p = str(tmp_path / "g.geeb")
+    write_binary(p, np.array([0], np.int32), np.array([1], np.int32),
+                 None, num_nodes=2)
+    assert load_labels(p) is None
+    save_labels(p, np.array([1, -1], np.int64))
+    got = load_labels(p)
+    assert got.dtype == np.int32
+    np.testing.assert_array_equal(got, [1, -1])
+    assert labels_path(p) == p + ".labels.npy"
