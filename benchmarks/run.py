@@ -32,8 +32,8 @@ def main(argv=None):
         print(f"--- {name}: {status} ({dt:.1f}s)")
 
     from benchmarks import (bench_gee_distributed, bench_gee_options,
-                            bench_gee_pallas, bench_gee_sbm, bench_quality,
-                            bench_storage, roofline)
+                            bench_gee_pallas, bench_gee_sbm, bench_gee_search,
+                            bench_quality, bench_storage, roofline)
 
     section("storage (paper Fig.1 / Sec.3)", bench_storage.run)
     section("Pallas ELL backend (padding + runtime)",
@@ -50,6 +50,11 @@ def main(argv=None):
             lambda: bench_gee_options.run(full=args.full))
     section("distributed GEE (weak scaling, collectives)",
             bench_gee_distributed.run)
+    section("similarity retrieval (recall@k + QPS)",
+            lambda: bench_gee_search.run(nodes=(2000, 6000, 20000)
+                                         if args.full
+                                         else (500, 1500, 5000),
+                                         queries=128, repeats=1))
     section("roofline (from dry-run)", lambda: roofline.main([]))
 
     print("\n==== summary " + "=" * 47)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gee import GEEOptions, gee, class_counts
-from repro.core.incremental import Delta, IncrementalGEE
+from repro.core.incremental import Delta, DirtyRowTracker, IncrementalGEE
 from repro.graph.containers import EdgeList, edge_list_from_numpy, symmetrize
 
 
@@ -61,6 +61,9 @@ class GEEEmbedder:
     _z: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
     _inc: Optional[IncrementalGEE] = dataclasses.field(default=None,
                                                        repr=False)
+    _index: Optional[object] = dataclasses.field(default=None, repr=False)
+    _index_tracker: Optional[DirtyRowTracker] = dataclasses.field(
+        default=None, repr=False)
 
     # -- construction helpers ------------------------------------------------
     @staticmethod
@@ -84,6 +87,7 @@ class GEEEmbedder:
         self._labels = jnp.asarray(labels, jnp.int32)
         self._z = None
         self._inc = None
+        self._reset_index()
         return self
 
     def fit_file(self, path: str, labels=None, **open_kw) -> "GEEEmbedder":
@@ -110,6 +114,7 @@ class GEEEmbedder:
         self._labels = jnp.asarray(labels, jnp.int32)
         self._z = None
         self._inc = None
+        self._reset_index()
         return self
 
     def fit_transform_file(self, path: str, labels=None,
@@ -136,6 +141,10 @@ class GEEEmbedder:
         if self._inc is None:
             self._inc = IncrementalGEE.from_graph(
                 self._edges, self._labels, self.num_classes, self.options)
+            # Track invalidations so a live similarity index repairs its
+            # buckets instead of rebuilding (see build_index / neighbors).
+            self._index_tracker = DirtyRowTracker(self._inc.n)
+            self._inc.add_dirty_listener(self._index_tracker)
         self._inc.apply(delta)
         self._labels = jnp.asarray(self._inc.labels)
         self._z = None
@@ -184,21 +193,98 @@ class GEEEmbedder:
 
     # -- classification on top of the embedding ------------------------------
     def class_means(self) -> jax.Array:
+        """Per-class mean of Z over labeled vertices, [K, K].
+
+        Empty classes (no labeled member, e.g. an over-provisioned
+        ``num_classes``) get ``inf`` rows -- the same guard as
+        ``repro.core.ensemble._assign_nearest_centroid`` -- so ``predict``
+        can never assign a vertex to a class with zero members (an origin
+        row would win every small-norm vertex, isolated ones above all).
+        """
         z = self.transform()
         z = z[: self._num_nodes()]
         onehot = jax.nn.one_hot(self._labels, self.num_classes, dtype=z.dtype)
         counts = onehot.sum(0)
-        return (onehot.T @ z) / jnp.maximum(counts, 1.0)[:, None]
+        means = (onehot.T @ z) / jnp.maximum(counts, 1.0)[:, None]
+        return jnp.where((counts > 0)[:, None], means, jnp.inf)
 
     def predict(self, rows: jax.Array | None = None) -> jax.Array:
         """Nearest-class-mean vertex classification (the standard GEE
-        downstream evaluation)."""
+        downstream evaluation).  ``rows`` restricts to a vertex subset:
+        any array-like of ids, single-element and scalar included (always
+        returns a 1-D label array)."""
         z = self.transform()[: self._num_nodes()]
         if rows is not None:
-            z = z[rows]
+            z = z[jnp.atleast_1d(jnp.asarray(rows))]
         means = self.class_means()
         d2 = jnp.sum((z[:, None, :] - means[None, :, :]) ** 2, axis=-1)
+        d2 = jnp.where(jnp.isnan(d2), jnp.inf, d2)   # inf-mean arithmetic
         return jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+    # -- similarity retrieval on top of the embedding ------------------------
+    def build_index(self, *, metric: str = "l2", nprobe: int | None = None,
+                    pad_multiple: int | None = None, impl: str = "auto"):
+        """Build (and cache) a vertex-similarity index over the embedding.
+
+        Returns a :class:`repro.search.index.ClassPartitionedIndex` whose
+        coarse cells are this embedder's class structure.  Works for every
+        backend, file-backed fits included (it indexes ``transform()``'s
+        output).  After ``partial_fit`` deltas the cached index is
+        *repaired* in place on the next :meth:`neighbors` call -- stale
+        rows move between buckets; no rebuild.
+        """
+        from repro.search.index import (DEFAULT_PAD_MULTIPLE,
+                                        ClassPartitionedIndex)
+
+        z = self.transform()[: self._num_nodes()]
+        self._index = ClassPartitionedIndex.build(
+            z, np.asarray(self._labels), self.num_classes, metric=metric,
+            nprobe=nprobe,
+            pad_multiple=pad_multiple or DEFAULT_PAD_MULTIPLE, impl=impl)
+        if self._index_tracker is not None:
+            self._index_tracker.drain()   # fresh index == already repaired
+        return self._index
+
+    def neighbors(self, query_rows=None, k: int = 10, *, queries=None,
+                  nprobe: int | None = None, brute_force: bool = False):
+        """Top-``k`` most similar vertices per query.
+
+        ``query_rows`` queries by vertex id (each vertex is its own best
+        hit); ``queries`` passes explicit [Q, K] vectors instead.  Builds
+        the index on first use and repairs it after ``partial_fit`` deltas.
+        Returns ``(ids [Q, k] int32, scores [Q, k] f32)``.
+        """
+        if self._index is None:
+            self.build_index()
+        self._repair_index()
+        if queries is not None:
+            return self._index.search(queries, k, nprobe=nprobe,
+                                      brute_force=brute_force)
+        if query_rows is None:
+            raise ValueError("pass query_rows (vertex ids) or queries "
+                             "(explicit vectors)")
+        return self._index.search_rows(np.asarray(query_rows), k,
+                                       nprobe=nprobe,
+                                       brute_force=brute_force)
+
+    @property
+    def index(self):
+        """The cached similarity index (None until ``build_index`` /
+        ``neighbors``)."""
+        return self._index
+
+    def _reset_index(self):
+        self._index = None
+        self._index_tracker = None   # a new graph gets a new tracker
+
+    def _repair_index(self):
+        """Fold ``partial_fit`` invalidations into the cached index."""
+        if self._index is None or self._index_tracker is None \
+                or not self._index_tracker.pending:
+            return
+        rows = self._index_tracker.drain()
+        z = self.transform()[: self._num_nodes()]
+        self._index.update_rows(rows, z[jnp.asarray(rows)])
 
     # -- internals -----------------------------------------------------------
     def _compute(self) -> jax.Array:

@@ -28,7 +28,9 @@ instead of recomputing all E edges.  Affected rows per option setting:
 The embedding is materialized lazily with a cached Z: edge deltas invalidate
 only the affected rows; label deltas also dirty the global 1/n_k column
 scaling, which forces one vectorized refresh on the next query (the serving
-layer in ``repro.serve.batching`` surfaces these invalidation counts).
+layer in ``repro.search.service`` surfaces these invalidation counts, and
+``add_dirty_listener`` pushes them to downstream consumers of Z such as
+the vertex-similarity index).
 
 Numerics: accumulators are float64 on host, queries cast to float32;
 equivalence with a from-scratch ``gee_sparse_jax`` on the mutated graph is
@@ -48,6 +50,49 @@ from repro.graph.delta import EdgeDelta, LabelDelta
 Delta = Union[EdgeDelta, LabelDelta]
 
 _DIAG_W = 1.0          # diagonal-augmentation weight (A + I)
+
+
+class DirtyRowTracker:
+    """Listener-side accumulator for ``add_dirty_listener`` events.
+
+    The canonical consumer pattern: register the tracker itself as the
+    listener, let it fold per-row invalidations (a full invalidation
+    collapses the set to the all-rows sentinel), and ``drain`` the pending
+    rows when repairing derived state -- the vertex-similarity index above
+    all (``repro.search``).  Shared by ``GEEQueryService`` and
+    ``GEEEmbedder`` so the invalidation protocol exists exactly once.
+    """
+
+    def __init__(self, num_rows: int):
+        self.n = int(num_rows)
+        self._rows: set[int] = set()
+        self._all = False
+
+    def __call__(self, rows, full: bool = False) -> None:
+        if full:
+            self._all = True
+            self._rows.clear()
+        elif not self._all:
+            self._rows.update(int(r) for r in rows)
+
+    @property
+    def pending(self) -> int:
+        """Rows a ``drain`` would return (n when fully invalidated)."""
+        return self.n if self._all else len(self._rows)
+
+    @property
+    def full(self) -> bool:
+        return self._all
+
+    def drain(self) -> np.ndarray:
+        """Rows needing repair (every row when full); clears the state."""
+        if self._all:
+            rows = np.arange(self.n, dtype=np.int64)
+        else:
+            rows = np.fromiter(self._rows, np.int64, len(self._rows))
+        self._rows.clear()
+        self._all = False
+        return rows
 
 
 def _fill_adj(adj: list, rows: np.ndarray, cols: np.ndarray,
@@ -85,6 +130,7 @@ class IncrementalGEE:
         self._z: np.ndarray | None = None                # cached float32 Z
         self._dirty_rows: set[int] = set()
         self._winv_dirty = False
+        self._dirty_listeners: list = []
         self.stats = {
             "edge_deltas": 0, "label_deltas": 0, "rows_recomputed": 0,
             "row_edges_scanned": 0, "z_rows_patched": 0, "z_full_refreshes": 0,
@@ -186,6 +232,35 @@ class IncrementalGEE:
                   else np.ones(ra.shape, np.float64)) * _DIAG_W
             np.add.at(self.S, (ra, yr), dh)
 
+    def add_dirty_listener(self, fn) -> None:
+        """Subscribe ``fn(rows, full)`` to invalidation events.
+
+        Called after each applied delta batch with ``rows`` (np.int64 array
+        of rows whose Z changed) and ``full`` (True when the global 1/n_k
+        scaling moved, i.e. *every* cached row is stale regardless of
+        ``rows``).  This is how downstream consumers of Z -- the vertex
+        search index (``repro.search``) above all -- repair themselves
+        incrementally instead of diffing or rebuilding.  Listeners must not
+        mutate this object.
+        """
+        self._dirty_listeners.append(fn)
+
+    def remove_dirty_listener(self, fn) -> None:
+        """Unsubscribe a listener registered with ``add_dirty_listener``
+        (no-op if absent), so short-lived consumers neither leak nor keep
+        paying the per-delta notification cost."""
+        try:
+            self._dirty_listeners.remove(fn)
+        except ValueError:
+            pass
+
+    def _notify_dirty(self, rows, full: bool = False):
+        if not self._dirty_listeners:
+            return
+        rows = np.asarray(rows, np.int64)
+        for fn in self._dirty_listeners:
+            fn(rows, full)
+
     def _adj_add(self, u: int, v: int, w: float):
         nw = self.out_nbrs[u].get(v, 0.0) + w
         if nw == 0.0:
@@ -250,6 +325,7 @@ class IncrementalGEE:
             self._recompute_rows(affected)
             touched = affected
         self._dirty_rows.update(touched)
+        self._notify_dirty(np.fromiter(touched, np.int64, len(touched)))
         return self
 
     def apply_labels(self, delta: LabelDelta) -> "IncrementalGEE":
@@ -266,6 +342,8 @@ class IncrementalGEE:
             raise ValueError(f"label delta assigns a label >= num_classes "
                              f"{self.k}")
         lap = self.opts.laplacian
+        dirtied: set[int] = set()
+        any_flip = False
         for nd, nl in zip(nodes.tolist(), labs.tolist()):
             if nd < 0:
                 continue                       # padding slot
@@ -273,6 +351,7 @@ class IncrementalGEE:
             self.stats["label_deltas"] += 1
             if old == nl:
                 continue
+            any_flip = True
             if old >= 0:
                 self.nk[old] -= 1
             if nl >= 0:
@@ -287,6 +366,7 @@ class IncrementalGEE:
                 if nl >= 0:
                     self.S[i, nl] += w_hat
                 self._dirty_rows.add(i)
+                dirtied.add(i)
             self.stats["row_edges_scanned"] += len(self.in_nbrs[nd])
             if self.opts.diag_aug:
                 dh = (dj * dj if lap else 1.0) * _DIAG_W
@@ -295,6 +375,13 @@ class IncrementalGEE:
                 if nl >= 0:
                     self.S[nd, nl] += dh
                 self._dirty_rows.add(nd)
+                dirtied.add(nd)
+        if any_flip:
+            # the 1/n_k column rescale touches every row with mass in the
+            # affected classes -- full invalidation, matching
+            # ``num_pending_rows``
+            self._notify_dirty(np.fromiter(dirtied, np.int64, len(dirtied)),
+                               full=True)
         return self
 
     # -- queries -------------------------------------------------------------

@@ -1,0 +1,354 @@
+"""Pallas TPU kernels: tiled masked similarity scoring for vertex retrieval.
+
+The search subsystem (``repro.search``) ranks database embeddings against
+query embeddings under two metrics:
+
+  l2       s[q, m] = -||q - x_m||^2          (higher = closer)
+  cosine   s[q, m] = <q, x_m> / (||q|| ||x_m||), 0 when either norm is 0
+
+Two access patterns cover every retrieval path:
+
+  * ``pairwise_scores``  -- one shared database matrix for all queries.
+    Used for brute-force search and for probing the coarse cell centroids.
+    The contraction ``q @ x.T`` lands on the MXU one (block_q, block_m)
+    tile at a time; the norm terms are lane reductions on the same tiles.
+  * ``gathered_scores``  -- per-query candidate matrices (the IVF path:
+    each query gathers the members of its probed cells).  The kernel is a
+    batched matvec over the query axis, the same ``dot_general`` shape the
+    ``gee_spmm`` one-hot contraction uses.
+
+Both kernels mask *inside* the kernel: padding / invalid slots (cell-table
+``-1`` entries, inactive centroids) score ``NEG_INF`` and therefore never
+survive a top-k.  K is padded to the 128-lane boundary with zeros, which
+leave dots and norms unchanged, so padded and unpadded inputs agree.
+
+Block sizes are shape-bucketed exactly like ``repro.kernels.gee_spmm``:
+a measured table keyed on pow2 buckets of (Q, M, K), with a VMEM-budget
+formula fallback, all behind an ``lru_cache`` so a sweep over many batch
+shapes stays within a handful of entries.
+
+On CPU the kernels run in interpret mode; ``impl="auto"`` therefore routes
+to the pure-JAX fallback (identical formulas, tested equivalent) anywhere
+but TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LANE = 128          # TPU lane width: last-dim alignment unit
+SUBLANE = 8         # f32 sublane height
+NEG_INF = float(np.finfo(np.float32).min)   # masked-slot score (finite, so
+                                            # later arithmetic cannot NaN)
+_VMEM_BUDGET = 4 * 1024 * 1024   # cap for the [bq, bm, K] gathered candidates
+_COS_EPS = 1e-30
+
+METRICS = ("l2", "cosine")
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pow2_at_least(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def _check_metric(metric: str):
+    if metric not in METRICS:
+        raise ValueError(f"unknown metric {metric!r}; pick one of {METRICS}")
+
+
+def _resolve_impl(impl: str) -> str:
+    """'auto' -> pallas on TPU, pure-JAX fallback everywhere else (the
+    kernels would run in interpret mode off-TPU, strictly slower)."""
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jax"
+    if impl not in ("pallas", "jax"):
+        raise ValueError(f"unknown impl {impl!r}; 'auto', 'pallas' or 'jax'")
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# block-size autotuning (same discipline as gee_spmm: pow2-bucketed table
+# + budget-formula fallback, lru_cached)
+# ---------------------------------------------------------------------------
+
+# (q_bucket, m_bucket, k_bucket) -> (block_q, block_m)
+_PAIRWISE_TABLE = {
+    # centroid probing: tiny M, batch of queries
+    (64, 4, 4): (64, 8),
+    (256, 4, 4): (128, 8),
+    # brute-force scoring against SBM-sized databases, K <= 8
+    (256, 1024, 4): (128, 256),
+    (256, 16384, 4): (128, 512),
+    # wide-K regimes
+    (256, 4096, 128): (128, 256),
+}
+
+# (q_bucket, m_bucket, k_bucket) -> (block_q, block_m)
+_GATHERED_TABLE = {
+    # default service batches probing a few hundred candidates
+    (64, 256, 4): (16, 256),
+    (256, 512, 4): (16, 256),
+    (256, 2048, 4): (8, 512),
+    # wide-K keeps the 3D candidate block small
+    (256, 512, 128): (8, 128),
+}
+
+
+def choose_pairwise_blocks(num_queries: int, num_points: int,
+                           dim: int) -> tuple[int, int]:
+    """(block_q, block_m) for the shared-database kernel, clamped to the
+    actual (padded) operand sizes."""
+    bq, bm = _choose_pairwise_bucketed(
+        _pow2_at_least(max(num_queries, 1)),
+        _pow2_at_least(max(num_points, 1)),
+        _pow2_at_least(max(dim, 1)))
+    bq = min(bq, _ceil_to(max(num_queries, 1), SUBLANE))
+    bm = min(bm, _ceil_to(max(num_points, 1), SUBLANE))
+    return bq, bm
+
+
+@functools.lru_cache(maxsize=512)
+def _choose_pairwise_bucketed(q_b: int, m_b: int, k_b: int) -> tuple[int, int]:
+    hit = _PAIRWISE_TABLE.get((q_b, m_b, k_b))
+    if hit is not None:
+        return hit
+    # tiles: q [bq, K] + x [bm, K] + out [bq, bm]; K is lane-padded.
+    block_q = min(128, _ceil_to(q_b, SUBLANE))
+    block_m = min(512, _ceil_to(m_b, SUBLANE))
+    k_pad = _ceil_to(k_b, LANE)
+    while block_m > SUBLANE and \
+            (block_q + block_m) * k_pad * 4 + block_q * block_m * 4 \
+            > _VMEM_BUDGET:
+        block_m //= 2
+    return block_q, max(block_m, SUBLANE)
+
+
+def choose_gathered_blocks(num_queries: int, num_cand: int,
+                           dim: int) -> tuple[int, int]:
+    """(block_q, block_m) for the per-query-candidates kernel; the 3D
+    [bq, bm, K] candidate block dominates VMEM, so it drives the budget."""
+    bq, bm = _choose_gathered_bucketed(
+        _pow2_at_least(max(num_queries, 1)),
+        _pow2_at_least(max(num_cand, 1)),
+        _pow2_at_least(max(dim, 1)))
+    bq = min(bq, _ceil_to(max(num_queries, 1), SUBLANE))
+    bm = min(bm, _ceil_to(max(num_cand, 1), SUBLANE))
+    return bq, bm
+
+
+@functools.lru_cache(maxsize=512)
+def _choose_gathered_bucketed(q_b: int, m_b: int, k_b: int) -> tuple[int, int]:
+    hit = _GATHERED_TABLE.get((q_b, m_b, k_b))
+    if hit is not None:
+        return hit
+    k_pad = _ceil_to(k_b, LANE)
+    block_q = min(16, _ceil_to(q_b, SUBLANE))
+    block_m = min(512, _ceil_to(m_b, LANE))
+    while block_m > LANE and block_q * block_m * k_pad * 4 > _VMEM_BUDGET:
+        block_m //= 2
+    return block_q, max(block_m, SUBLANE)
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _scores_from_parts(dot, qn2, xn2, metric: str):
+    """Combine the MXU dot tile with the norm reductions.  ``qn2`` [BQ, 1]
+    and ``xn2`` [..., BM] broadcast against ``dot`` [..., BQ/BM]."""
+    if metric == "l2":
+        return 2.0 * dot - qn2 - xn2             # = -||q - x||^2
+    denom = jnp.sqrt(qn2) * jnp.sqrt(xn2)
+    return jnp.where(denom > 0, dot / jnp.maximum(denom, _COS_EPS), 0.0)
+
+
+def _pairwise_kernel(q_ref, x_ref, valid_ref, out_ref, *, metric: str):
+    """One (block_q, block_m) tile of the shared-database score matrix."""
+    q = q_ref[...]                               # [BQ, K_pad] f32
+    x = x_ref[...]                               # [BM, K_pad] f32
+    v = valid_ref[...]                           # [1, BM] f32 (1 = live)
+    dot = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    qn2 = jnp.sum(q * q, axis=1, keepdims=True)  # [BQ, 1]
+    xn2 = jnp.sum(x * x, axis=1)[None, :]        # [1, BM]
+    s = _scores_from_parts(dot, qn2, xn2, metric)
+    out_ref[...] = jnp.where(v > 0, s, NEG_INF)
+
+
+def _gathered_kernel(cand_ref, q_ref, mask_ref, out_ref, *, metric: str):
+    """One (block_q, block_m) tile of per-query candidate scores: a batched
+    matvec over the query axis (the ``gee_spmm`` dot_general shape)."""
+    cand = cand_ref[...]                         # [BQ, BM, K_pad] f32
+    q = q_ref[...]                               # [BQ, K_pad] f32
+    m = mask_ref[...]                            # [BQ, BM] f32 (1 = live)
+    dot = jax.lax.dot_general(cand, q, (((2,), (1,)), ((0,), (0,))),
+                              preferred_element_type=jnp.float32)  # [BQ, BM]
+    qn2 = jnp.sum(q * q, axis=1, keepdims=True)  # [BQ, 1]
+    cn2 = jnp.sum(cand * cand, axis=2)           # [BQ, BM]
+    s = _scores_from_parts(dot, qn2, cn2, metric)
+    out_ref[...] = jnp.where(m > 0, s, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# public entry points (pad -> pallas_call / jnp fallback -> slice)
+# ---------------------------------------------------------------------------
+
+def pairwise_scores(queries: jax.Array, database: jax.Array,
+                    valid: jax.Array | None = None, *, metric: str = "l2",
+                    impl: str = "auto", block_q: int | None = None,
+                    block_m: int | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """Masked [Q, M] score matrix of ``queries`` [Q, K] against a shared
+    ``database`` [M, K].  ``valid`` [M] (bool/float, nonzero = live) masks
+    database rows to ``NEG_INF``; ``None`` means all live."""
+    _check_metric(metric)
+    impl = _resolve_impl(impl)
+    q, m = queries.shape[0], database.shape[0]
+    if block_q is None or block_m is None:
+        auto = choose_pairwise_blocks(q, m, queries.shape[1])
+        block_q = auto[0] if block_q is None else block_q
+        block_m = auto[1] if block_m is None else block_m
+    if valid is None:
+        valid = jnp.ones((m,), jnp.float32)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if impl == "jax":
+        return _pairwise_jax(queries, database, valid, metric)
+    return _pairwise_pallas(queries, database, valid, metric, block_q,
+                            block_m, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _pairwise_jax(queries, database, valid, metric):
+    q = queries.astype(jnp.float32)
+    x = database.astype(jnp.float32)
+    dot = q @ x.T
+    qn2 = jnp.sum(q * q, axis=1, keepdims=True)
+    xn2 = jnp.sum(x * x, axis=1)[None, :]
+    s = _scores_from_parts(dot, qn2, xn2, metric)
+    return jnp.where(valid.astype(jnp.float32)[None, :] > 0, s, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_q", "block_m",
+                                             "interpret"))
+def _pairwise_pallas(queries, database, valid, metric, block_q, block_m,
+                     interpret):
+    q, k = queries.shape
+    m = database.shape[0]
+    k_pad = _ceil_to(max(k, 1), LANE)
+    q_pad = _ceil_to(max(q, 1), block_q)
+    m_pad = _ceil_to(max(m, 1), block_m)
+    qp = jnp.zeros((q_pad, k_pad), jnp.float32)
+    qp = qp.at[:q, :k].set(queries.astype(jnp.float32))
+    xp = jnp.zeros((m_pad, k_pad), jnp.float32)
+    xp = xp.at[:m, :k].set(database.astype(jnp.float32))
+    vp = jnp.zeros((1, m_pad), jnp.float32)
+    vp = vp.at[0, :m].set(valid.astype(jnp.float32))
+    out = pl.pallas_call(
+        functools.partial(_pairwise_kernel, metric=metric),
+        grid=(q_pad // block_q, m_pad // block_m),
+        in_specs=[
+            pl.BlockSpec((block_q, k_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, k_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_m), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q_pad, m_pad), jnp.float32),
+        interpret=interpret,
+    )(qp, xp, vp)
+    return out[:q, :m]
+
+
+def gathered_scores(queries: jax.Array, cand: jax.Array, mask: jax.Array, *,
+                    metric: str = "l2", impl: str = "auto",
+                    block_q: int | None = None, block_m: int | None = None,
+                    interpret: bool | None = None) -> jax.Array:
+    """Masked [Q, M] scores of ``queries`` [Q, K] against *per-query*
+    candidates ``cand`` [Q, M, K] (the IVF gather).  ``mask`` [Q, M]
+    (nonzero = live) sends padding slots to ``NEG_INF``."""
+    _check_metric(metric)
+    impl = _resolve_impl(impl)
+    q, m, k = cand.shape
+    if block_q is None or block_m is None:
+        auto = choose_gathered_blocks(q, m, k)
+        block_q = auto[0] if block_q is None else block_q
+        block_m = auto[1] if block_m is None else block_m
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if impl == "jax":
+        return _gathered_jax(queries, cand, mask, metric)
+    return _gathered_pallas(queries, cand, mask, metric, block_q, block_m,
+                            interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _gathered_jax(queries, cand, mask, metric):
+    q = queries.astype(jnp.float32)
+    c = cand.astype(jnp.float32)
+    dot = jnp.einsum("qmk,qk->qm", c, q)
+    qn2 = jnp.sum(q * q, axis=1, keepdims=True)
+    cn2 = jnp.sum(c * c, axis=2)
+    s = _scores_from_parts(dot, qn2, cn2, metric)
+    return jnp.where(mask.astype(jnp.float32) > 0, s, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_q", "block_m",
+                                             "interpret"))
+def _gathered_pallas(queries, cand, mask, metric, block_q, block_m,
+                     interpret):
+    q, m, k = cand.shape
+    k_pad = _ceil_to(max(k, 1), LANE)
+    q_pad = _ceil_to(max(q, 1), block_q)
+    m_pad = _ceil_to(max(m, 1), block_m)
+    cp = jnp.zeros((q_pad, m_pad, k_pad), jnp.float32)
+    cp = cp.at[:q, :m, :k].set(cand.astype(jnp.float32))
+    qp = jnp.zeros((q_pad, k_pad), jnp.float32)
+    qp = qp.at[:q, :k].set(queries.astype(jnp.float32))
+    mp = jnp.zeros((q_pad, m_pad), jnp.float32)
+    mp = mp.at[:q, :m].set(mask.astype(jnp.float32))
+    out = pl.pallas_call(
+        functools.partial(_gathered_kernel, metric=metric),
+        grid=(q_pad // block_q, m_pad // block_m),
+        in_specs=[
+            pl.BlockSpec((block_q, block_m, k_pad), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_q, k_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, block_m), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q_pad, m_pad), jnp.float32),
+        interpret=interpret,
+    )(cp, qp, mp)
+    return out[:q, :m]
+
+
+def masked_topk(scores: jax.Array, ids: jax.Array | None,
+                k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k over the last axis of a masked score matrix.
+
+    Returns ``(ids [Q, k] int32, scores [Q, k] f32)``; slots whose best
+    available score is the mask sentinel come back as id ``-1`` with
+    ``NEG_INF`` score (fewer than k live candidates).  ``ids=None`` means
+    candidate m *is* database row m (the brute-force layout)."""
+    q, m = scores.shape
+    kk = min(k, m)
+    top, pos = jax.lax.top_k(scores, kk)
+    out_ids = pos.astype(jnp.int32) if ids is None \
+        else jnp.take_along_axis(ids, pos, axis=1).astype(jnp.int32)
+    out_ids = jnp.where(top > NEG_INF / 2, out_ids, -1)
+    if kk < k:
+        pad_i = jnp.full((q, k - kk), -1, jnp.int32)
+        pad_s = jnp.full((q, k - kk), NEG_INF, jnp.float32)
+        out_ids = jnp.concatenate([out_ids, pad_i], axis=1)
+        top = jnp.concatenate([top, pad_s], axis=1)
+    return out_ids, top

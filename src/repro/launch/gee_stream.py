@@ -29,7 +29,7 @@ from repro.graph.datasets import TABLE2, load
 from repro.graph.delta import (edge_delta_from_numpy, label_delta_from_numpy,
                                symmetrize_delta)
 from repro.graph.sbm import sample_sbm
-from repro.serve.batching import GEEDeltaServer
+from repro.search.service import GEEDeltaServer
 
 
 def _undirected_pairs(edges):

@@ -1,0 +1,14 @@
+"""Vertex-similarity retrieval over GEE embeddings.
+
+The serving-side answer to "which vertices look like this one": an
+IVF-style index whose coarse cells are the GEE class structure
+(:mod:`repro.search.index`) and a batched query service that stays fresh
+against streaming graph updates (:mod:`repro.search.service`).  See
+``docs/search.md``.
+"""
+
+from repro.search.index import ClassPartitionedIndex, default_nprobe
+from repro.search.service import GEEDeltaServer, GEEQueryService
+
+__all__ = ["ClassPartitionedIndex", "default_nprobe", "GEEQueryService",
+           "GEEDeltaServer"]

@@ -1,0 +1,310 @@
+"""GEE serving layer: streaming delta ingestion + batched similarity queries.
+
+Two front-ends share the continuous-batching philosophy of the LM decode
+server (``repro.serve.batching``): work is queued, *coalesced*, padded to a
+small set of static shapes, and executed in batches, with per-flush stats.
+
+* :class:`GEEDeltaServer` -- the write path.  Queues ``EdgeDelta`` /
+  ``LabelDelta`` batches against an ``IncrementalGEE``, merging duplicates
+  before applying (moved here from ``repro.serve.batching``, which keeps a
+  deprecated re-export).
+* :class:`GEEQueryService` -- the read path.  Queues vertex-similarity
+  queries against a :class:`repro.search.index.ClassPartitionedIndex` and
+  answers them in padded batches through one jitted search per flush.
+
+The two compose through ``IncrementalGEE``'s dirty-row notifications: the
+query service subscribes with ``add_dirty_listener`` at construction, so
+whenever a delta is applied (directly, via ``GEEEmbedder.partial_fit``, or
+by a delta-server flush) the service learns exactly which embedding rows
+moved.  The next query flush then *repairs* those index buckets --
+``ClassPartitionedIndex.update_rows`` on just the stale rows -- instead of
+rebuilding the index.  A label flip moves the global 1/n_k scaling and
+invalidates every row; the service refreshes all embeddings in one
+vectorized pass but still never re-derives the cell structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.incremental import DirtyRowTracker
+from repro.search.index import ClassPartitionedIndex
+
+
+@dataclasses.dataclass
+class QueryTicket:
+    """One pending similarity query batch (any number of query vectors)."""
+
+    uid: int
+    k: int
+    queries: Optional[np.ndarray] = None     # [q, K] explicit vectors ...
+    rows: Optional[np.ndarray] = None        # ... or vertex ids, resolved
+    ids: Optional[np.ndarray] = None         # against the *post-repair* index
+    scores: Optional[np.ndarray] = None
+    done: bool = False
+
+
+class GEEQueryService:
+    """Batched vertex-similarity query server over a class-partitioned index.
+
+    ``submit``/``submit_rows`` enqueue; the queue flushes when the backlog
+    reaches ``flush_every`` query vectors or on an explicit :meth:`flush`.
+    Each flush (1) repairs the index buckets for every embedding row the
+    subscribed ``IncrementalGEE`` dirtied since the last flush, (2) pads
+    the gathered query batch to a ``pad_multiple`` so the jitted search
+    path sees few distinct shapes, and (3) runs one batched search and
+    scatters results back to the tickets.
+    """
+
+    def __init__(self, index: ClassPartitionedIndex, inc=None,
+                 flush_every: int = 64, pad_multiple: int = 64,
+                 nprobe: int | None = None, default_k: int = 10):
+        self.index = index
+        self.inc = inc
+        self.flush_every = int(flush_every)
+        self.pad_multiple = max(int(pad_multiple), 1)
+        self.nprobe = nprobe
+        self.default_k = int(default_k)
+        self._queue: list[QueryTicket] = []
+        self._pending = 0
+        self._uid = 0
+        self._tracker: Optional[DirtyRowTracker] = None
+        self.stats = {"submitted": 0, "flushes": 0, "queries_scored": 0,
+                      "pad_queries": 0, "repaired_rows": 0,
+                      "bucket_moves": 0, "full_refreshes": 0,
+                      "flush_ms": []}
+        if inc is not None:
+            if inc.n != index.num_points:
+                raise ValueError(
+                    f"IncrementalGEE has {inc.n} rows but the index holds "
+                    f"{index.num_points}")
+            self._tracker = DirtyRowTracker(inc.n)
+            inc.add_dirty_listener(self._tracker)
+
+    def close(self) -> None:
+        """Unsubscribe from the incremental state (idempotent); a retired
+        service then costs the write path nothing."""
+        if self.inc is not None and self._tracker is not None:
+            self.inc.remove_dirty_listener(self._tracker)
+            self._tracker = None
+
+    @property
+    def stale_rows(self) -> int:
+        """Rows whose index entry lags the incremental state (next flush
+        repairs them)."""
+        return self._tracker.pending if self._tracker is not None else 0
+
+    # -- ingest --------------------------------------------------------------
+    def submit(self, queries, k: int | None = None) -> QueryTicket:
+        """Queue explicit query vectors ([q, K] or a single [K]); may
+        trigger a flush.  Returns the ticket carrying the results once
+        ``done``."""
+        q = np.asarray(queries, np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        return self._enqueue(QueryTicket(uid=self._next_uid(),
+                                         k=self._k(k), queries=q),
+                             q.shape[0])
+
+    def submit_rows(self, rows, k: int | None = None) -> QueryTicket:
+        """Queue vertex-id queries.  The vectors are read from the index at
+        flush time, *after* bucket repair, so a query for a just-updated
+        vertex sees its fresh embedding."""
+        r = np.asarray(rows, np.int64).reshape(-1)
+        return self._enqueue(QueryTicket(uid=self._next_uid(),
+                                         k=self._k(k), rows=r), r.size)
+
+    def _k(self, k) -> int:
+        return self.default_k if k is None else int(k)
+
+    def _next_uid(self) -> int:
+        self._uid += 1
+        return self._uid
+
+    def _enqueue(self, ticket: QueryTicket, n_queries: int) -> QueryTicket:
+        self._queue.append(ticket)
+        self._pending += n_queries
+        self.stats["submitted"] += n_queries
+        if self._pending >= self.flush_every:
+            self.flush()
+        return ticket
+
+    # -- repair --------------------------------------------------------------
+    def repair(self) -> int:
+        """Apply pending invalidations to the index; returns rows repaired.
+        Runs automatically at the start of every flush."""
+        if self.inc is None or self._tracker is None \
+                or not self._tracker.pending:
+            return 0
+        self.stats["full_refreshes"] += int(self._tracker.full)
+        rows = self._tracker.drain()
+        z_rows = self.inc.embedding(rows)
+        moves = self.index.update_rows(rows, z_rows)
+        self.stats["repaired_rows"] += int(rows.size)
+        self.stats["bucket_moves"] += moves
+        return int(rows.size)
+
+    # -- flush ---------------------------------------------------------------
+    def flush(self) -> list[QueryTicket]:
+        """Repair, then answer every queued ticket in one padded batch."""
+        if not self._queue:
+            self.repair()            # keep freshness even on empty flushes
+            return []
+        t0 = time.perf_counter()
+        self.repair()
+
+        tickets, self._queue = self._queue, []
+        self._pending = 0
+        # Row tickets gather only their rows on device -- never the whole
+        # [N, K] database to host.
+        blocks = [t.queries if t.queries is not None
+                  else np.asarray(self.index.z[jnp.asarray(t.rows)])
+                  for t in tickets]
+        counts = [b.shape[0] for b in blocks]
+        q = np.concatenate(blocks, axis=0)
+        total = q.shape[0]
+        target = -(-total // self.pad_multiple) * self.pad_multiple
+        if target > total:
+            q = np.concatenate(
+                [q, np.zeros((target - total, q.shape[1]), np.float32)],
+                axis=0)
+        self.stats["pad_queries"] += target - total
+        k_max = max(t.k for t in tickets)
+        ids, scores = self.index.search(q, k_max, nprobe=self.nprobe)
+        ids = np.asarray(ids)
+        scores = np.asarray(scores)
+
+        off = 0
+        for t, c in zip(tickets, counts):
+            t.ids = ids[off:off + c, :t.k]
+            t.scores = scores[off:off + c, :t.k]
+            t.done = True
+            off += c
+        self.stats["flushes"] += 1
+        self.stats["queries_scored"] += total
+        self.stats["flush_ms"].append((time.perf_counter() - t0) * 1e3)
+        return tickets
+
+    def search(self, queries, k: int | None = None):
+        """Synchronous convenience: flush the backlog, answer ``queries``
+        immediately.  Returns ``(ids, scores)`` numpy arrays."""
+        ticket = self.submit(queries, k)
+        if not ticket.done:
+            self.flush()
+        return ticket.ids, ticket.scores
+
+
+# ---------------------------------------------------------------------------
+# GEE delta serving: coalescing queue + cached-Z invalidation (the write
+# path; moved from repro.serve.batching, which re-exports for back-compat)
+# ---------------------------------------------------------------------------
+
+class GEEDeltaServer:
+    """Streaming front-end over :class:`repro.core.incremental.IncrementalGEE`.
+
+    Mirrors the continuous-batching idea of the LM decode server for the
+    graph workload: instead of applying every delta the instant it arrives,
+    updates are queued and *coalesced* -- duplicate (src, dst) edge
+    increments sum into one, repeated label writes keep only the last --
+    and the merged batch is applied once, either when the backlog reaches
+    ``flush_every`` entries or when a read (``embed`` / ``predict-style``
+    access) needs fresh state.  Reads between flushes are served from the
+    incremental state's cached Z, which invalidates per-row for edge deltas
+    and once globally for label deltas (the 1/n_k rescale).
+
+    Coalesced batches are padded to ``pad_multiple`` so a future jitted
+    applier sees a small set of static delta shapes (same discipline as
+    ``EdgeList`` padding).
+    """
+
+    def __init__(self, inc, flush_every: int = 256, pad_multiple: int = 64):
+        self.inc = inc
+        self.flush_every = int(flush_every)
+        self.pad_multiple = int(pad_multiple)
+        self._edge_backlog: list = []
+        self._label_backlog: list = []
+        self._pending = 0
+        self.stats = {"submitted": 0, "flushes": 0, "applied_deltas": 0,
+                      "coalesced_away": 0, "rows_invalidated": 0,
+                      "reads": 0, "stale_reads": 0, "rejected_deltas": 0}
+
+    # -- ingest --------------------------------------------------------------
+    def submit(self, delta) -> None:
+        """Queue an ``EdgeDelta`` or ``LabelDelta``; may trigger a flush."""
+        from repro.graph.delta import EdgeDelta, LabelDelta
+
+        if isinstance(delta, EdgeDelta):
+            self._edge_backlog.append(delta)
+        elif isinstance(delta, LabelDelta):
+            self._label_backlog.append(delta)
+        else:
+            raise TypeError(f"unsupported delta type {type(delta).__name__}")
+        self._pending += delta.num_deltas
+        self.stats["submitted"] += delta.num_deltas
+        if self._pending >= self.flush_every:
+            self.flush()
+
+    def flush(self) -> int:
+        """Coalesce and apply the backlog; returns deltas actually applied."""
+        from repro.graph.delta import (coalesce_edge_deltas,
+                                       coalesce_label_deltas)
+
+        if not self._pending:
+            return 0
+        applied = 0
+        stale_before = self.inc.num_pending_rows
+        try:
+            if self._edge_backlog:
+                merged = coalesce_edge_deltas(self._edge_backlog,
+                                              pad_multiple=self.pad_multiple)
+                self.inc.apply_edges(merged)
+                applied += merged.num_deltas
+                self._edge_backlog.clear()
+            if self._label_backlog:
+                merged = coalesce_label_deltas(self._label_backlog,
+                                               pad_multiple=self.pad_multiple)
+                self.inc.apply_labels(merged)
+                applied += merged.num_deltas
+                self._label_backlog.clear()
+        except ValueError:
+            # Drop the poisoned backlog before re-raising.  The appliers are
+            # atomic (they validate before mutating), so the incremental
+            # state is still consistent; keeping the bad batch queued would
+            # wedge every later submit/flush/read on the same error.
+            rejected = (sum(d.num_deltas for d in self._edge_backlog)
+                        + sum(d.num_deltas for d in self._label_backlog))
+            self._edge_backlog.clear()
+            self._label_backlog.clear()
+            self._pending = 0
+            self.stats["rejected_deltas"] += rejected
+            raise
+        self.stats["flushes"] += 1
+        self.stats["applied_deltas"] += applied
+        self.stats["coalesced_away"] += self._pending - applied
+        # rows newly dirtied by THIS flush (a label delta legitimately counts
+        # as N: the 1/n_k rescale invalidates every cached row); rows still
+        # dirty from an earlier, unread flush are not re-counted.
+        self.stats["rows_invalidated"] += max(
+            0, self.inc.num_pending_rows - stale_before)
+        self._pending = 0
+        return applied
+
+    # -- reads ---------------------------------------------------------------
+    def embed(self, rows=None, max_staleness: int | None = 0):
+        """Serve embedding rows.
+
+        ``max_staleness`` bounds how many queued-but-unapplied deltas a read
+        may ignore: 0 (default) forces a flush first; None serves straight
+        from the cached Z no matter the backlog (monitoring-style reads).
+        """
+        if max_staleness is not None and self._pending > max_staleness:
+            self.flush()
+        if self._pending:
+            self.stats["stale_reads"] += 1
+        self.stats["reads"] += 1
+        return self.inc.embedding(rows)

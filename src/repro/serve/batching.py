@@ -152,110 +152,9 @@ class BatchedServer:
 
 
 # ---------------------------------------------------------------------------
-# GEE delta serving: coalescing queue + cached-Z invalidation
+# Deprecated location: GEEDeltaServer moved to repro.search.service, next to
+# the query service it composes with.  Import from there; this re-export
+# keeps existing ``from repro.serve.batching import GEEDeltaServer`` working.
 # ---------------------------------------------------------------------------
 
-class GEEDeltaServer:
-    """Streaming front-end over :class:`repro.core.incremental.IncrementalGEE`.
-
-    Mirrors the continuous-batching idea above for the graph workload:
-    instead of applying every delta the instant it arrives, updates are
-    queued and *coalesced* -- duplicate (src, dst) edge increments sum into
-    one, repeated label writes keep only the last -- and the merged batch is
-    applied once, either when the backlog reaches ``flush_every`` entries or
-    when a read (``embed`` / ``predict-style`` access) needs fresh state.
-    Reads between flushes are served from the incremental state's cached Z,
-    which invalidates per-row for edge deltas and once globally for label
-    deltas (the 1/n_k rescale).
-
-    Coalesced batches are padded to ``pad_multiple`` so a future jitted
-    applier sees a small set of static delta shapes (same discipline as
-    ``EdgeList`` padding).
-    """
-
-    def __init__(self, inc, flush_every: int = 256, pad_multiple: int = 64):
-        self.inc = inc
-        self.flush_every = int(flush_every)
-        self.pad_multiple = int(pad_multiple)
-        self._edge_backlog: list = []
-        self._label_backlog: list = []
-        self._pending = 0
-        self.stats = {"submitted": 0, "flushes": 0, "applied_deltas": 0,
-                      "coalesced_away": 0, "rows_invalidated": 0,
-                      "reads": 0, "stale_reads": 0, "rejected_deltas": 0}
-
-    # -- ingest --------------------------------------------------------------
-    def submit(self, delta) -> None:
-        """Queue an ``EdgeDelta`` or ``LabelDelta``; may trigger a flush."""
-        from repro.graph.delta import EdgeDelta, LabelDelta
-
-        if isinstance(delta, EdgeDelta):
-            self._edge_backlog.append(delta)
-        elif isinstance(delta, LabelDelta):
-            self._label_backlog.append(delta)
-        else:
-            raise TypeError(f"unsupported delta type {type(delta).__name__}")
-        self._pending += delta.num_deltas
-        self.stats["submitted"] += delta.num_deltas
-        if self._pending >= self.flush_every:
-            self.flush()
-
-    def flush(self) -> int:
-        """Coalesce and apply the backlog; returns deltas actually applied."""
-        from repro.graph.delta import (coalesce_edge_deltas,
-                                       coalesce_label_deltas)
-
-        if not self._pending:
-            return 0
-        applied = 0
-        stale_before = self.inc.num_pending_rows
-        try:
-            if self._edge_backlog:
-                merged = coalesce_edge_deltas(self._edge_backlog,
-                                              pad_multiple=self.pad_multiple)
-                self.inc.apply_edges(merged)
-                applied += merged.num_deltas
-                self._edge_backlog.clear()
-            if self._label_backlog:
-                merged = coalesce_label_deltas(self._label_backlog,
-                                               pad_multiple=self.pad_multiple)
-                self.inc.apply_labels(merged)
-                applied += merged.num_deltas
-                self._label_backlog.clear()
-        except ValueError:
-            # Drop the poisoned backlog before re-raising.  The appliers are
-            # atomic (they validate before mutating), so the incremental
-            # state is still consistent; keeping the bad batch queued would
-            # wedge every later submit/flush/read on the same error.
-            rejected = (sum(d.num_deltas for d in self._edge_backlog)
-                        + sum(d.num_deltas for d in self._label_backlog))
-            self._edge_backlog.clear()
-            self._label_backlog.clear()
-            self._pending = 0
-            self.stats["rejected_deltas"] += rejected
-            raise
-        self.stats["flushes"] += 1
-        self.stats["applied_deltas"] += applied
-        self.stats["coalesced_away"] += self._pending - applied
-        # rows newly dirtied by THIS flush (a label delta legitimately counts
-        # as N: the 1/n_k rescale invalidates every cached row); rows still
-        # dirty from an earlier, unread flush are not re-counted.
-        self.stats["rows_invalidated"] += max(
-            0, self.inc.num_pending_rows - stale_before)
-        self._pending = 0
-        return applied
-
-    # -- reads ---------------------------------------------------------------
-    def embed(self, rows=None, max_staleness: int | None = 0):
-        """Serve embedding rows.
-
-        ``max_staleness`` bounds how many queued-but-unapplied deltas a read
-        may ignore: 0 (default) forces a flush first; None serves straight
-        from the cached Z no matter the backlog (monitoring-style reads).
-        """
-        if max_staleness is not None and self._pending > max_staleness:
-            self.flush()
-        if self._pending:
-            self.stats["stale_reads"] += 1
-        self.stats["reads"] += 1
-        return self.inc.embedding(rows)
+from repro.search.service import GEEDeltaServer  # noqa: E402,F401

@@ -1,10 +1,12 @@
 """Ensemble clustering + public API surface."""
 
 import numpy as np
+import pytest
 
 from repro.core.api import GEEEmbedder, node_features
 from repro.core.ensemble import adjusted_rand_index, gee_cluster
 from repro.core.gee import GEEOptions
+from repro.graph.containers import edge_list_from_numpy, symmetrize
 from repro.graph.sbm import sample_sbm
 
 
@@ -38,6 +40,43 @@ def test_node_features_shape():
     z = node_features(s.edges, s.labels, s.num_classes)
     assert z.shape == (200, s.num_classes)
     assert np.isfinite(np.asarray(z)).all()
+
+
+def test_class_means_empty_class_guard():
+    """Regression: an empty class used to get an origin mean, so predict()
+    could assign a vertex (any zero/small-norm row, isolated ones above
+    all) to a class with zero members.  Empty means are now inf rows."""
+    edges = symmetrize(edge_list_from_numpy(
+        np.array([0, 0, 2, 2]), np.array([1, 2, 3, 1]), None, 5))
+    y = np.array([0, 0, 1, 1, -1], np.int32)     # class 2 has no members
+    emb = GEEEmbedder(num_classes=3, options=GEEOptions()).fit(edges, y)
+    assert np.allclose(np.asarray(emb.transform())[4], 0.0)  # isolated node
+    means = np.asarray(emb.class_means())
+    assert np.isinf(means[2]).all()
+    assert np.isfinite(means[:2]).all()
+    pred = np.asarray(emb.predict())
+    assert (pred != 2).all(), pred               # pre-fix: pred[4] == 2
+
+
+@pytest.mark.parametrize("lap", [False, True])
+@pytest.mark.parametrize("cor", [False, True])
+def test_predict_rows_with_unknown_labels(lap, cor):
+    s = sample_sbm(300, seed=13)
+    y = s.labels.copy()
+    y[::7] = -1                                  # unknown labels present
+    emb = GEEEmbedder(num_classes=s.num_classes,
+                      options=GEEOptions(laplacian=lap, diag_aug=True,
+                                         correlation=cor)).fit(s.edges, y)
+    full = np.asarray(emb.predict())
+    assert full.shape == (300,)
+    assert ((full >= 0) & (full < s.num_classes)).all()
+    rows = np.array([0, 7, 14, 123])             # includes unknown-label ids
+    sub = np.asarray(emb.predict(rows=rows))
+    np.testing.assert_array_equal(sub, full[rows])
+    # single-vertex selections: 1-element array and plain python list
+    one = np.asarray(emb.predict(rows=np.array([7])))
+    assert one.shape == (1,) and one[0] == full[7]
+    assert np.asarray(emb.predict(rows=[42])).tolist() == [full[42]]
 
 
 def test_adjusted_rand_index_bounds():
