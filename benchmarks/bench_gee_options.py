@@ -15,6 +15,7 @@ import time
 import numpy as np
 
 from repro.core.gee import ALL_OPTION_SETTINGS, gee
+from repro.core.plan import PreparedGraph, sweep_options
 from repro.graph.datasets import TABLE2, load
 
 
@@ -59,6 +60,25 @@ def run(full: bool = False, repeats: int = 3):
                 if r["dataset"] == "proteins-all" and "Lap=T" in r["opts"]]
     for r in lap_rows:
         assert r["scipy"] < r["python_loop"], r
+
+    # Prep-reuse cell: the same 8-setting sweep through one PreparedGraph
+    # (sweep_options shares the symmetrized upload, self-loop augmentation,
+    # Laplacian fold, and the scatter pass of correlation-only pairs)
+    # versus per-call prep.  benchmarks/bench_gee_plan.py is the gated CI
+    # version of this cell.
+    ds = load(names[-1], seed=0)
+    k = ds.spec.num_classes
+    t_cold = _time(lambda: [np.asarray(gee(ds.edges, ds.labels, k, o))
+                            for o in ALL_OPTION_SETTINGS], repeats)
+    prep = PreparedGraph.wrap(ds.edges)
+    t_warm = _time(lambda: [np.asarray(z) for z in
+                            sweep_options(prep, ds.labels, k).values()],
+                   repeats)
+    print(f"{names[-1]:16s} 8-setting sweep: per-call {t_cold*1e3:8.1f}ms  "
+          f"prep-reuse {t_warm*1e3:8.1f}ms  "
+          f"({t_cold / t_warm:4.2f}x)")
+    rows.append({"dataset": names[-1], "opts": "sweep8",
+                 "per_call": t_cold, "prep_reuse": t_warm})
     return rows
 
 

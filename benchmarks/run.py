@@ -32,10 +32,16 @@ def main(argv=None):
         print(f"--- {name}: {status} ({dt:.1f}s)")
 
     from benchmarks import (bench_gee_distributed, bench_gee_options,
-                            bench_gee_pallas, bench_gee_sbm, bench_gee_search,
-                            bench_quality, bench_storage, roofline)
+                            bench_gee_pallas, bench_gee_plan, bench_gee_sbm,
+                            bench_gee_search, bench_quality, bench_storage,
+                            roofline)
 
     section("storage (paper Fig.1 / Sec.3)", bench_storage.run)
+    section("plan prep-reuse (8-setting sweep + autotune persistence)",
+            lambda: bench_gee_plan.run(nodes=(1000, 3000)
+                                       if not args.full
+                                       else (1000, 3000, 10000),
+                                       repeats=2))
     section("Pallas ELL backend (padding + runtime)",
             lambda: bench_gee_pallas.run(sizes=(300, 600, 1200)
                                          if not args.full

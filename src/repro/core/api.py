@@ -15,9 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gee import GEEOptions, gee, class_counts
+from repro.core.gee import GEEOptions, class_counts
 from repro.core.incremental import Delta, DirtyRowTracker, IncrementalGEE
-from repro.graph.containers import EdgeList, edge_list_from_numpy, symmetrize
+from repro.core.plan import GEEPlan, PreparedGraph
+from repro.graph.containers import EdgeList
 
 
 @dataclasses.dataclass
@@ -56,6 +57,8 @@ class GEEEmbedder:
     chunk_edges: Optional[int] = None        # 'chunked' / file-backed only
 
     _edges: Optional[EdgeList] = dataclasses.field(default=None, repr=False)
+    _prepared: Optional[PreparedGraph] = dataclasses.field(default=None,
+                                                          repr=False)
     _chunked: Optional[object] = dataclasses.field(default=None, repr=False)
     _labels: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
     _z: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
@@ -70,19 +73,20 @@ class GEEEmbedder:
     def from_arrays(src, dst, weight, labels, num_classes: int,
                     num_nodes: int | None = None, undirected: bool = True,
                     **kw) -> "GEEEmbedder":
-        n = int(num_nodes if num_nodes is not None
-                else max(int(np.max(src)), int(np.max(dst))) + 1)
-        edges = edge_list_from_numpy(np.asarray(src), np.asarray(dst),
-                                     None if weight is None
-                                     else np.asarray(weight), n)
-        if undirected:
-            edges = symmetrize(edges)
+        prepared = PreparedGraph.from_arrays(src, dst, weight,
+                                             num_nodes=num_nodes,
+                                             undirected=undirected)
         emb = GEEEmbedder(num_classes=num_classes, **kw)
-        return emb.fit(edges, labels)
+        return emb.fit(prepared, labels)
 
     # -- sklearn-ish surface -------------------------------------------------
-    def fit(self, edges: EdgeList, labels) -> "GEEEmbedder":
-        self._edges = edges
+    def fit(self, edges: "EdgeList | PreparedGraph", labels) -> "GEEEmbedder":
+        """Fit an in-memory graph.  Passing a ``PreparedGraph`` (instead
+        of a bare ``EdgeList``) carries its memoized prep artifacts into
+        this embedder -- refits, backend switches and option sweeps then
+        share them."""
+        self._prepared = PreparedGraph.wrap(edges)
+        self._edges = self._prepared.base
         self._chunked = None
         self._labels = jnp.asarray(labels, jnp.int32)
         self._z = None
@@ -111,6 +115,7 @@ class GEEEmbedder:
                 raise ValueError(
                     f"no labels given and no sidecar {path}.labels.npy")
         self._edges = None
+        self._prepared = None
         self._labels = jnp.asarray(labels, jnp.int32)
         self._z = None
         self._inc = None
@@ -154,6 +159,13 @@ class GEEEmbedder:
     def incremental(self) -> Optional[IncrementalGEE]:
         """The live streaming state (None until ``partial_fit`` is called)."""
         return self._inc
+
+    @property
+    def prepared(self) -> Optional[PreparedGraph]:
+        """The fitted graph's memoized prep artifacts (None for
+        file-backed fits).  Reuse it across embedders/sweeps:
+        ``GEEEmbedder(...).fit(other.prepared, labels)``."""
+        return self._prepared
 
     def current_edges(self) -> EdgeList:
         """The graph actually embedded: the mutated one once streaming.
@@ -288,32 +300,28 @@ class GEEEmbedder:
 
     # -- internals -----------------------------------------------------------
     def _compute(self) -> jax.Array:
-        edges, labels = self._edges, self._labels
+        labels = self._labels
         if self._chunked is not None:
             from repro.core.chunked import gee_chunked
 
             return gee_chunked(self._chunked, labels, self.num_classes,
                                self.options)
-        if self.backend == "chunked":
-            from repro.core.chunked import gee_chunked
-            from repro.graph.io import (DEFAULT_CHUNK_EDGES,
-                                        ChunkedEdgeList)
-
-            chunk = self.chunk_edges or DEFAULT_CHUNK_EDGES
-            return gee_chunked(
-                ChunkedEdgeList.from_edge_list(edges, chunk),
-                labels, self.num_classes, self.options)
         if self.backend == "distributed":
             from repro.core.distributed import gee_distributed
 
             if self.mesh is None:
                 raise ValueError("distributed backend needs a mesh")
-            z = gee_distributed(edges, labels, self.num_classes, self.options,
-                                mesh=self.mesh, axes=self.mesh_axes,
+            z = gee_distributed(self._prepared, labels, self.num_classes,
+                                self.options, mesh=self.mesh,
+                                axes=self.mesh_axes,
                                 local_backend=self.local_backend)
-            return z[: edges.num_nodes]
-        return gee(edges, labels, self.num_classes, self.options,
-                   backend=self.backend)
+            return z[: self._edges.num_nodes]
+        # Everything else is one plan over the shared PreparedGraph, so a
+        # refit / option change / backend switch reuses all prep artifacts
+        # (the chunked route reuses its cached chunk manifest too).
+        return GEEPlan.build(self._prepared, self.num_classes, self.options,
+                             backend=self.backend,
+                             chunk_edges=self.chunk_edges).execute(labels)
 
 
 def node_features(edges: EdgeList, labels, num_classes: int,

@@ -47,7 +47,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.gee import (GEEOptions, _row_l2_normalize, class_weight_inv)
+from repro.core.epilogue import finalize, inv_sqrt_degrees
+from repro.core.gee import GEEOptions, class_weight_inv
 from repro.graph.io import (ChunkedEdgeList, DEFAULT_CHUNK_EDGES,
                             load_labels, open_edge_list)
 
@@ -91,29 +92,16 @@ def _fold_z(z_flat, src, dst, weight, labels, winv, dinv, *,
                                         num_segments=z_flat.shape[0])
 
 
-@partial(jax.jit, static_argnames=("num_classes", "opts"))
-def _finalize(z_flat, labels, winv, dinv, *, num_classes: int,
-              opts: GEEOptions):
-    """Apply the O(N*K) epilogue once: diag-aug self loops, correlation."""
-    n = dinv.shape[0]
-    z = z_flat.reshape(n, num_classes)
-    if opts.diag_aug:
-        valid = labels >= 0
-        ys = jnp.where(valid, labels, 0)
-        # self loop i->i, weight 1, Laplacian-scaled by d_i^{-1/2} twice
-        add = jnp.where(valid, dinv * dinv * winv[ys], 0.0)
-        z = z.at[jnp.arange(n), ys].add(add)
-    if opts.correlation:
-        z = _row_l2_normalize(z)
-    return z
-
-
 def gee_chunked(chunked: ChunkedEdgeList, labels, num_classes: int,
-                opts: GEEOptions = GEEOptions()) -> jax.Array:
+                opts: GEEOptions = GEEOptions(),
+                impl: str = "jnp") -> jax.Array:
     """Chunk-streamed GEE over any :class:`ChunkedEdgeList` source.
 
     Numerically the ``gee_sparse_jax`` contract (<= 1e-5 max-abs under
     every option setting); host memory stays O(chunk_edges + N*K).
+    ``impl`` selects the epilogue row-norm implementation
+    (``repro.core.epilogue.row_l2_normalize``; ``"auto"`` picks the
+    Pallas kernel on TPU).
     """
     n, k = chunked.num_nodes, int(num_classes)
     labels = jnp.asarray(labels, jnp.int32)
@@ -130,8 +118,7 @@ def gee_chunked(chunked: ChunkedEdgeList, labels, num_classes: int,
                                 undirected=und)
         if opts.diag_aug:
             deg = deg + 1.0
-        dinv = jnp.where(deg > 0,
-                         jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
+        dinv = inv_sqrt_degrees(deg)
     else:
         dinv = jnp.ones((n,), jnp.float32)
 
@@ -139,7 +126,10 @@ def gee_chunked(chunked: ChunkedEdgeList, labels, num_classes: int,
     for ch in chunked.chunks():                              # pass 2
         z = _fold_z(z, ch.src, ch.dst, ch.weight, labels, winv, dinv,
                     num_classes=k, undirected=und)
-    return _finalize(z, labels, winv, dinv, num_classes=k, opts=opts)
+    # The O(N*K) epilogue (diag-aug self loops + correlation) is the shared
+    # repro.core.epilogue implementation -- applied once, after streaming.
+    return finalize(z, labels, winv, dinv, num_classes=k, opts=opts,
+                    impl=impl)
 
 
 def gee_chunked_from_file(path: str, labels=None, num_classes: int | None = None,

@@ -32,6 +32,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.distributed.compat import shard_map, shard_map_nocheck
 
+from repro.core.epilogue import inv_sqrt_degrees, row_l2_normalize_jnp
 from repro.core.gee import GEEOptions, class_weight_inv
 from repro.graph.containers import EdgeList, add_self_loops
 from repro.graph.partition import shard_edges, shard_edges_to_ell
@@ -57,7 +58,7 @@ def _local_gee_partial(src, dst, weight, labels, winv, num_nodes_pad: int,
         # Degrees need global knowledge: partial degree then all-reduce.
         deg_part = jax.ops.segment_sum(weight, src, num_segments=num_nodes_pad)
         deg = jax.lax.psum(deg_part, axes)
-        dinv = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
+        dinv = inv_sqrt_degrees(deg)
         weight = weight * dinv[src] * dinv[dst]
 
     yd = labels[dst]
@@ -86,8 +87,9 @@ def _gee_distributed_jit(src, dst, weight, labels, num_classes: int,
         z_rows = jax.lax.psum_scatter(z_part, axes, scatter_dimension=0,
                                       tiled=True)
         if opts.correlation:
-            norm = jnp.sqrt(jnp.sum(z_rows * z_rows, axis=-1, keepdims=True))
-            z_rows = jnp.where(norm > 0, z_rows / jnp.maximum(norm, 1e-30), 0.0)
+            # Row-sharded rows normalize independently: the shared jnp
+            # epilogue form is safe inside the shard_map body.
+            z_rows = row_l2_normalize_jnp(z_rows)
         return z_rows
 
     spec_e = P(axes)                  # edge arrays sharded on dim 0
@@ -116,8 +118,7 @@ def _gee_distributed_pallas_jit(cols, vals, labels, num_classes: int,
     def body(cols_l, vals_l, labels_l, winv_l):
         if opts.laplacian:
             deg = jax.lax.psum(jnp.sum(vals_l, axis=1), axes)
-            dinv = jnp.where(deg > 0,
-                             jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
+            dinv = inv_sqrt_degrees(deg)
             vals_scaled = vals_l * dinv[:, None] * dinv[cols_l]
         else:
             vals_scaled = vals_l
@@ -127,9 +128,7 @@ def _gee_distributed_pallas_jit(cols, vals, labels, num_classes: int,
         z_rows = jax.lax.psum_scatter(z_part, axes, scatter_dimension=0,
                                       tiled=True)
         if opts.correlation:
-            norm = jnp.sqrt(jnp.sum(z_rows * z_rows, axis=-1, keepdims=True))
-            z_rows = jnp.where(norm > 0, z_rows / jnp.maximum(norm, 1e-30),
-                               0.0)
+            z_rows = row_l2_normalize_jnp(z_rows)
         return z_rows
 
     # nocheck: jax has no replication rule for pallas_call inside shard_map
@@ -139,13 +138,16 @@ def _gee_distributed_pallas_jit(cols, vals, labels, num_classes: int,
     return fn(cols, vals, labels, winv)
 
 
-def gee_distributed(edges: EdgeList, labels, num_classes: int,
+def gee_distributed(edges, labels, num_classes: int,
                     opts: GEEOptions = GEEOptions(), *, mesh: Mesh,
                     axes: tuple[str, ...] = ("data",),
                     pre_sharded: bool = False,
                     local_backend: str = "segment_sum") -> jax.Array:
     """Distributed sparse GEE.  Returns Z with rows sharded over ``axes``.
 
+    ``edges`` is an ``EdgeList`` or a ``repro.core.plan.PreparedGraph``
+    (the latter reuses its cached self-loop augmentation instead of
+    re-concatenating per call).
     ``pre_sharded=True`` skips the host-side shuffle/pad (the caller already
     produced device-ready arrays, e.g. the dry-run path).
     ``local_backend`` selects the per-shard compute: ``"segment_sum"`` (the
@@ -154,8 +156,11 @@ def gee_distributed(edges: EdgeList, labels, num_classes: int,
     Row padding: Z has ``pad_nodes(N, P)`` rows; callers slice ``[:N]``.
     """
     p = _axis_size(mesh, axes)
-    if opts.diag_aug:
-        edges = add_self_loops(edges)
+    if isinstance(edges, EdgeList):
+        if opts.diag_aug:
+            edges = add_self_loops(edges)
+    else:                              # PreparedGraph (duck-typed: no cycle)
+        edges = edges.augmented(opts.diag_aug)
     n_pad = pad_nodes(edges.num_nodes, p)
     labels = jnp.asarray(labels, jnp.int32)
     if labels.shape[0] < n_pad:

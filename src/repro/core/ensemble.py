@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gee import GEEOptions, gee_sparse_jax
+from repro.core.plan import PreparedGraph
 from repro.graph.containers import EdgeList
 
 
@@ -46,16 +47,17 @@ def _assign_nearest_centroid(z: jax.Array, labels: jax.Array, k: int):
 
 
 @partial(jax.jit, static_argnames=("num_classes", "max_iters", "opts"))
-def gee_cluster_once(edges: EdgeList, init_labels: jax.Array,
-                     num_classes: int, max_iters: int = 30,
-                     opts: GEEOptions = GEEOptions(laplacian=True,
-                                                   diag_aug=True,
-                                                   correlation=True)):
-    """Single replicate: iterate (embed with current labels) -> (relabel)."""
+def _cluster_once_prepped(eff_edges: EdgeList, init_labels: jax.Array,
+                          num_classes: int, max_iters: int,
+                          opts: GEEOptions):
+    """Replicate body over *prepared* edges: self loops and the Laplacian
+    fold depend only on the graph, so they are hoisted out -- each
+    refinement iteration is just scatter + epilogue."""
+    inner = GEEOptions(correlation=opts.correlation)
 
     def step(state):
         labels, _, it, _ = state
-        z = gee_sparse_jax(edges, labels, num_classes, opts)
+        z = gee_sparse_jax(eff_edges, labels, num_classes, inner)
         new, score = _assign_nearest_centroid(z, labels, num_classes)
         changed = jnp.any(new != labels)
         return new, score, it + 1, changed
@@ -64,26 +66,47 @@ def gee_cluster_once(edges: EdgeList, init_labels: jax.Array,
         _, _, it, changed = state
         return jnp.logical_and(changed, it < max_iters)
 
-    n = edges.num_nodes
     state = (init_labels.astype(jnp.int32), jnp.inf, jnp.int32(0),
              jnp.bool_(True))
     labels, score, iters, _ = jax.lax.while_loop(cond, step, state)
-    z = gee_sparse_jax(edges, labels, num_classes, opts)
+    z = gee_sparse_jax(eff_edges, labels, num_classes, inner)
     return ClusterResult(labels=labels, embedding=z, score=score, iters=iters)
 
 
-def gee_cluster(edges: EdgeList, num_classes: int, *, replicates: int = 5,
+def gee_cluster_once(edges, init_labels: jax.Array,
+                     num_classes: int, max_iters: int = 30,
+                     opts: GEEOptions = GEEOptions(laplacian=True,
+                                                   diag_aug=True,
+                                                   correlation=True)):
+    """Single replicate: iterate (embed with current labels) -> (relabel).
+
+    ``edges`` is an ``EdgeList`` or ``PreparedGraph``; prep (self-loop
+    augmentation + Laplacian fold) runs once per call -- not once per
+    refinement iteration -- and with a shared ``PreparedGraph`` once per
+    *ensemble*.
+    """
+    prepared = PreparedGraph.wrap(edges)
+    return _cluster_once_prepped(prepared.effective_edges(opts), init_labels,
+                                 num_classes, max_iters, opts)
+
+
+def gee_cluster(edges, num_classes: int, *, replicates: int = 5,
                 max_iters: int = 30, seed: int = 0,
                 opts: GEEOptions = GEEOptions(laplacian=True, diag_aug=True,
                                               correlation=True)) -> ClusterResult:
-    """Ensemble clustering: best-of-R random restarts by SSE score."""
+    """Ensemble clustering: best-of-R random restarts by SSE score.
+
+    All replicates share one ``PreparedGraph``, so the O(E) prep is paid
+    once for the whole ensemble.
+    """
+    prepared = PreparedGraph.wrap(edges)
     key = jax.random.PRNGKey(seed)
     best: ClusterResult | None = None
     for r in range(replicates):
         key, sub = jax.random.split(key)
-        init = jax.random.randint(sub, (edges.num_nodes,), 0, num_classes,
+        init = jax.random.randint(sub, (prepared.num_nodes,), 0, num_classes,
                                   dtype=jnp.int32)
-        res = gee_cluster_once(edges, init, num_classes, max_iters, opts)
+        res = gee_cluster_once(prepared, init, num_classes, max_iters, opts)
         if best is None or float(res.score) < float(best.score):
             best = res
     assert best is not None

@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.epilogue import (EPS_NORM, inv_sqrt_degrees,
+                                 row_l2_normalize_jnp, row_l2_normalize_np)
 from repro.graph.containers import EdgeList, add_self_loops, to_dense
 
 
@@ -89,9 +91,10 @@ def weight_matrix_dense(labels: jax.Array, num_classes: int) -> jax.Array:
     return onehot * inv[None, :]
 
 
-def _row_l2_normalize(z: jax.Array) -> jax.Array:
-    norm = jnp.sqrt(jnp.sum(z * z, axis=-1, keepdims=True))
-    return jnp.where(norm > 0, z / jnp.maximum(norm, 1e-30), 0.0)
+# Deprecated alias: the correlation row normalization (and the rest of the
+# O(N*K) epilogue) moved to ``repro.core.epilogue``, the single numerics
+# source of truth shared by every backend.
+_row_l2_normalize = row_l2_normalize_jnp
 
 
 # ---------------------------------------------------------------------------
@@ -138,9 +141,7 @@ def gee_python_loop(src: np.ndarray, dst: np.ndarray, weight: np.ndarray,
 
     out = np.asarray(z, np.float64)
     if opts.correlation:
-        nrm = np.sqrt((out * out).sum(axis=1, keepdims=True))
-        nz = nrm[:, 0] > 0
-        out[nz] /= nrm[nz]
+        out = row_l2_normalize_np(out)     # shared epilogue semantics
     return out.astype(np.float32)
 
 
@@ -180,8 +181,14 @@ def gee_scipy(src: np.ndarray, dst: np.ndarray, weight: np.ndarray,
 
     z = a @ w_s                                    # CSR x CSR -> CSR
     if opts.correlation:
+        # Same semantics as repro.core.epilogue.row_l2_normalize: rows with
+        # norm > 0 divide by max(norm, EPS_NORM).  This backend computes in
+        # float64, so without the shared clamp a denormal-float32-scale row
+        # would renormalize to unit norm here while every other backend
+        # (float32, clamped) returns a tiny row -- a real cross-backend
+        # divergence until the epsilons were unified.
         nrm = sp.linalg.norm(z, axis=1)
-        inv = np.where(nrm > 0, 1.0 / np.maximum(nrm, 1e-300), 0.0)
+        inv = np.where(nrm > 0, 1.0 / np.maximum(nrm, EPS_NORM), 0.0)
         z = sp.diags_array(inv, format="csr") @ z
     if return_sparse:
         return z
@@ -198,13 +205,12 @@ def gee_dense_jax(edges: EdgeList, labels: jax.Array, num_classes: int,
     if opts.diag_aug:
         a = a + jnp.eye(edges.num_nodes, dtype=a.dtype)
     if opts.laplacian:
-        deg = a.sum(axis=1)
-        dinv = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
+        dinv = inv_sqrt_degrees(a.sum(axis=1))
         a = dinv[:, None] * a * dinv[None, :]
     w = weight_matrix_dense(labels, num_classes)
     z = a @ w
     if opts.correlation:
-        z = _row_l2_normalize(z)
+        z = row_l2_normalize_jnp(z)
     return z
 
 
@@ -216,7 +222,7 @@ def laplacian_edge_weights(edges: EdgeList) -> jax.Array:
     """w_ij <- w_ij * d_i^{-1/2} * d_j^{-1/2} without materializing D."""
     deg = jax.ops.segment_sum(edges.weight, edges.src,
                               num_segments=edges.num_nodes)
-    dinv = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
+    dinv = inv_sqrt_degrees(deg)
     return edges.weight * dinv[edges.src] * dinv[edges.dst]
 
 
@@ -240,33 +246,35 @@ def gee_sparse_jax(edges: EdgeList, labels: jax.Array, num_classes: int,
     z = jax.ops.segment_sum(contrib, flat_idx, num_segments=n * k)
     z = z.reshape(n, k)
     if opts.correlation:
-        z = _row_l2_normalize(z)
+        z = row_l2_normalize_jnp(z)
     return z
 
 
 def select_backend(edges: EdgeList, num_classes: int) -> str:
-    """Heuristic used by ``backend="auto"``.
+    """Deprecated shim: backend selection moved to
+    ``repro.core.plan.select_backend``, which adds the memory-footprint
+    route to ``chunked``.  Kept so external callers of the old location
+    keep working."""
+    from repro.core.plan import select_backend as _select  # deferred: cycle
 
-    The Pallas ELL kernel wins when the contraction lands on a real MXU and
-    the one-hot fits a few lanes; everywhere else the segment-sum path is the
-    safe O(E) default (on CPU the kernel runs in interpret mode, which is
-    strictly slower than segment-sum).
-    """
-    if jax.default_backend() == "tpu" and num_classes <= 4 * 128:
-        return "pallas"
-    return "sparse_jax"
+    return _select(edges, num_classes)
 
 
-def gee(edges: EdgeList, labels, num_classes: int,
+def gee(edges, labels, num_classes: int,
         opts: GEEOptions = GEEOptions(), backend: str = "sparse_jax"):
-    """Dispatch front-end.
+    """Dispatch front-end: a thin consumer of ``repro.core.plan.GEEPlan``.
+
+    ``edges`` is an ``EdgeList`` or a ``repro.core.plan.PreparedGraph``;
+    pass the latter (and reuse it across calls) to share every prep
+    artifact -- self-loop augmentation, Laplacian fold, ELL packing,
+    chunk manifest -- between fits, option settings and backends.
 
     Backends: ``sparse_jax`` (production default), ``pallas`` (ELL + Pallas
     kernel), ``chunked`` (bounded-memory streaming, see
     ``repro.core.chunked``), ``dense_jax`` (oracle), ``scipy``
     (paper-faithful), and ``python_loop`` (original-GEE reference).
-    ``auto`` picks via ``select_backend``.  See ``docs/backends.md`` for
-    the full decision guide.
+    ``auto`` picks via the ``repro.core.plan.select_backend`` cost model.
+    See ``docs/backends.md`` for the full decision guide.
 
     >>> import numpy as np
     >>> from repro.graph.containers import edge_list_from_numpy, symmetrize
@@ -278,31 +286,7 @@ def gee(edges: EdgeList, labels, num_classes: int,
     >>> np.asarray(z)[0].tolist()  # node 0 sees neighbor 1 (class 1, n_1=1)
     [0.0, 1.0]
     """
-    if backend == "auto":
-        backend = select_backend(edges, num_classes)
-    if backend == "sparse_jax":
-        return gee_sparse_jax(edges, jnp.asarray(labels), num_classes, opts)
-    if backend == "chunked":
-        from repro.core.chunked import gee_chunked  # deferred: avoids a cycle
-        from repro.graph.io import ChunkedEdgeList
+    from repro.core.plan import GEEPlan    # deferred: plan builds on gee
 
-        return gee_chunked(ChunkedEdgeList.from_edge_list(edges),
-                           labels, num_classes, opts)
-    if backend == "pallas":
-        from repro.kernels.ops import gee_pallas   # deferred: avoids a cycle
-
-        return gee_pallas(edges, jnp.asarray(labels), num_classes, opts)
-    if backend == "dense_jax":
-        return gee_dense_jax(edges, jnp.asarray(labels), num_classes, opts)
-    e = edges.num_edges
-    src = np.asarray(edges.src)[:e]
-    dst = np.asarray(edges.dst)[:e]
-    w = np.asarray(edges.weight)[:e]
-    y = np.asarray(labels)
-    if backend == "scipy":
-        return gee_scipy(src, dst, w, y, num_classes, opts,
-                         num_nodes=edges.num_nodes)
-    if backend == "python_loop":
-        return gee_python_loop(src, dst, w, y, num_classes, opts,
-                               num_nodes=edges.num_nodes)
-    raise ValueError(f"unknown backend {backend!r}")
+    return GEEPlan.build(edges, num_classes, opts,
+                         backend=backend).execute(labels)

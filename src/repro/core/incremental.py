@@ -43,6 +43,7 @@ from typing import Iterable, Sequence, Union
 
 import numpy as np
 
+from repro.core.epilogue import inv_sqrt_degrees_np, row_l2_normalize_np
 from repro.core.gee import GEEOptions
 from repro.graph.containers import EdgeList, edge_list_from_numpy
 from repro.graph.delta import EdgeDelta, LabelDelta
@@ -148,10 +149,8 @@ class IncrementalGEE:
         valid = y >= 0
         self.nk = np.bincount(y[valid], minlength=self.k).astype(np.float64)
 
-        e = edges.num_edges
-        src = np.asarray(edges.src)[:e]
-        dst = np.asarray(edges.dst)[:e]
-        w = np.asarray(edges.weight)[:e].astype(np.float64)
+        src, dst, w = edges.valid_arrays()
+        w = w.astype(np.float64)
         keep = w != 0
         src, dst, w = src[keep], dst[keep], w[keep]
         np.add.at(self.deg, src, w)
@@ -191,7 +190,10 @@ class IncrementalGEE:
 
     @staticmethod
     def _dinv_of(deg: np.ndarray) -> np.ndarray:
-        return np.where(deg > 0, 1.0 / np.sqrt(np.maximum(deg, 1e-300)), 0.0)
+        # Shared epilogue numerics (EPS_NORM clamp), so the float64
+        # accumulators agree with the float32 device backends even on
+        # denormal-scale degrees.
+        return inv_sqrt_degrees_np(deg)
 
     def _winv(self) -> np.ndarray:
         return np.where(self.nk > 0, 1.0 / np.maximum(self.nk, 1.0), 0.0)
@@ -389,8 +391,7 @@ class IncrementalGEE:
                           ) -> np.ndarray:
         z = self.S[rows] * winv[None, :]
         if self.opts.correlation:
-            nrm = np.sqrt((z * z).sum(axis=1, keepdims=True))
-            np.divide(z, nrm, out=z, where=nrm > 0)
+            z = row_l2_normalize_np(z)     # shared epilogue semantics
         return z.astype(np.float32)
 
     def embedding(self, rows=None) -> np.ndarray:

@@ -1,0 +1,487 @@
+"""Plan/executor layer: prepare a graph once, embed it many times.
+
+The paper's contribution is eliminating redundant work on sparse graphs,
+yet a naive client redoes the *same* O(E) preparation -- symmetrize,
+self-loop augmentation, the degree fold, the Laplacian edge reweighting,
+ELL packing, the chunk manifest -- on every fit, every option setting of
+an ensemble sweep, and every ``--compare`` cell.  One-Hot GEE
+(arXiv 2109.13098) shows the embedding itself is a cheap linear pass, so
+that preparation dominates repeated fits; Edge-Parallel GEE
+(arXiv 2402.04403) gets its speedup precisely by hoisting graph prep out
+of the per-run path.  This module makes that structural:
+
+  ``PreparedGraph``  an immutable wrapper over ``EdgeList`` that lazily
+                     computes and memoizes every derived artifact, so a
+                     second fit, another option setting, an ensemble
+                     replicate, or a ``--compare`` sweep never re-derives
+                     them.
+  ``GEEPlan``        resolves ``(backend="auto", opts, device)`` into
+                     explicit stages -- prep, scatter/SpMM, epilogue --
+                     and executes them against a labels vector.  The
+                     epilogue always runs through ``repro.core.epilogue``
+                     (the single numerics source of truth).
+  ``select_backend`` the cost model behind ``backend="auto"``: Pallas
+                     on a real MXU with lane-sized K, ``chunked`` when
+                     the working-set estimate exceeds the memory budget,
+                     ``sparse_jax`` otherwise.
+  ``sweep_options``  the many-settings fast path: correlation is a pure
+                     row postprocess, so the 8 canonical option settings
+                     need only 4 scatter passes over shared prep.
+
+``gee()``, ``GEEEmbedder``, the ensemble clusterer, the distributed
+sharder and the launch CLIs are all thin consumers of this layer.
+
+>>> import numpy as np
+>>> from repro.core.gee import ALL_OPTION_SETTINGS, GEEOptions
+>>> prep = PreparedGraph.from_arrays(     # symmetrized + uploaded ONCE
+...     np.array([0, 1, 2]), np.array([1, 2, 3]), None, num_nodes=4)
+>>> labels = np.array([0, 1, 0, 1], np.int32)
+>>> plan = GEEPlan.build(prep, 2, GEEOptions(laplacian=True, diag_aug=True,
+...                                          correlation=True))
+>>> [s.name for s in plan.stages]
+['effective_edges', 'segment_scatter', 'row_l2_normalize']
+>>> plan.execute(labels).shape
+(4, 2)
+>>> zs = sweep_options(prep, labels, 2)   # all 8 settings, prep shared
+>>> len(zs), zs[GEEOptions(correlation=True)].shape
+(8, (4, 2))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Iterable, Mapping, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import epilogue
+from repro.core.gee import (ALL_OPTION_SETTINGS, GEEOptions, gee_dense_jax,
+                            gee_python_loop, gee_scipy, gee_sparse_jax,
+                            laplacian_edge_weights)
+from repro.graph.containers import (EdgeList, add_self_loops,
+                                    edge_list_from_numpy, symmetrize)
+
+KNOWN_BACKENDS = ("sparse_jax", "pallas", "chunked", "dense_jax", "scipy",
+                  "python_loop")
+
+# Working-set budget for the cost model's route-to-chunked decision.
+ENV_MEMORY_BUDGET = "REPRO_GEE_MEMORY_BUDGET_BYTES"
+DEFAULT_MEMORY_BUDGET = 16 << 30    # 16 GiB: a generous laptop/host default
+
+# The Pallas kernel pays off only while the one-hot fits a few 128-lanes.
+PALLAS_MAX_CLASSES = 4 * 128
+
+
+@jax.jit
+def _laplacian_fold(edges: EdgeList) -> EdgeList:
+    """Fold d_i^{-1/2} d_j^{-1/2} into the edge weights (device, jitted)."""
+    return dataclasses.replace(edges,
+                               weight=laplacian_edge_weights(edges))
+
+
+_add_self_loops_jit = jax.jit(add_self_loops)
+
+
+# ---------------------------------------------------------------------------
+# PreparedGraph: the memoized prep artifacts
+# ---------------------------------------------------------------------------
+
+class PreparedGraph:
+    """Immutable wrapper over an ``EdgeList`` memoizing derived artifacts.
+
+    Artifacts (all lazy, each computed at most once per instance):
+
+      * ``with_self_loops()``          the diag-aug edge list (A + I)
+      * ``degrees(diag_aug)``          weighted degrees of the (augmented)
+                                       graph
+      * ``effective_edges(opts)``      self-loop-augmented AND
+                                       Laplacian-folded edges -- the exact
+                                       input of the scatter stage, keyed
+                                       on ``(diag_aug, laplacian)`` (the
+                                       correlation flag never affects prep)
+      * ``ell(diag_aug)`` /
+        ``bucketed_ell(diag_aug)``     the Pallas kernel's packing planes
+      * ``chunked(chunk_edges)``       the chunk manifest of the streaming
+                                       backend
+      * ``host_arrays()``              the valid-prefix numpy triple the
+                                       SciPy / python-loop backends consume
+
+    The wrapped ``EdgeList`` must not be mutated afterwards (they are
+    frozen dataclasses; nothing in the repo mutates them).
+    """
+
+    def __init__(self, edges: EdgeList):
+        if isinstance(edges, PreparedGraph):
+            raise TypeError("already a PreparedGraph; use PreparedGraph.wrap")
+        if not isinstance(edges, EdgeList):
+            raise TypeError(f"expected an EdgeList, got "
+                            f"{type(edges).__name__}")
+        self._edges = edges
+        self._cache: Dict[tuple, object] = {}
+        self._hits = 0
+        self._misses = 0
+
+    # -- construction --------------------------------------------------------
+    @staticmethod
+    def wrap(graph: "PreparedGraph | EdgeList") -> "PreparedGraph":
+        """Idempotent constructor: wrap an ``EdgeList``, pass a
+        ``PreparedGraph`` through untouched (preserving its caches)."""
+        return graph if isinstance(graph, PreparedGraph) \
+            else PreparedGraph(graph)
+
+    @staticmethod
+    def from_arrays(src, dst, weight=None, num_nodes: int | None = None,
+                    undirected: bool = True,
+                    pad_to: int | None = None) -> "PreparedGraph":
+        """Build from raw host arrays: symmetrize (for undirected input)
+        and upload exactly once -- the cold-start prep a per-call sweep
+        would otherwise repeat."""
+        src = np.asarray(src)
+        dst = np.asarray(dst)
+        n = int(num_nodes if num_nodes is not None
+                else max(int(src.max(initial=-1)),
+                         int(dst.max(initial=-1))) + 1)
+        edges = edge_list_from_numpy(
+            src, dst, None if weight is None else np.asarray(weight), n,
+            pad_to=pad_to)
+        if undirected:
+            edges = symmetrize(edges)
+        return PreparedGraph(edges)
+
+    # -- basics --------------------------------------------------------------
+    @property
+    def base(self) -> EdgeList:
+        """The wrapped (already-directed) edge list."""
+        return self._edges
+
+    @property
+    def num_nodes(self) -> int:
+        return self._edges.num_nodes
+
+    @property
+    def num_edges(self) -> int:
+        return self._edges.num_edges
+
+    def _memo(self, key: tuple, build):
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._hits += 1
+            return hit
+        self._misses += 1
+        value = build()
+        self._cache[key] = value
+        return value
+
+    def is_cached(self, key: tuple) -> bool:
+        return key in self._cache
+
+    def cache_info(self) -> dict:
+        """Which artifacts are resident, plus hit/miss counters (the
+        no-rebuild regression tests key on this)."""
+        return {"keys": tuple(sorted(map(str, self._cache))),
+                "entries": len(self._cache),
+                "hits": self._hits, "misses": self._misses}
+
+    # -- prep artifacts ------------------------------------------------------
+    def with_self_loops(self) -> EdgeList:
+        """The diagonal-augmented list (A + I), spliced after the valid
+        prefix exactly like ``repro.graph.containers.add_self_loops``."""
+        return self._memo(("self_loops",),
+                          lambda: _add_self_loops_jit(self._edges))
+
+    def augmented(self, diag_aug: bool) -> EdgeList:
+        return self.with_self_loops() if diag_aug else self._edges
+
+    def degrees(self, diag_aug: bool = False) -> jax.Array:
+        """Weighted out-degrees of the (augmented) graph, [N] f32."""
+        def build():
+            e = self.augmented(diag_aug)
+            return jax.ops.segment_sum(e.weight, e.src,
+                                       num_segments=e.num_nodes)
+        return self._memo(("degrees", bool(diag_aug)), build)
+
+    def laplacian_inv_sqrt(self, diag_aug: bool = False) -> jax.Array:
+        """d^{-1/2} of the (augmented) degrees, shared-epilogue clamped."""
+        return self._memo(
+            ("dinv", bool(diag_aug)),
+            lambda: epilogue.inv_sqrt_degrees(self.degrees(diag_aug)))
+
+    def effective_edges(self, opts: GEEOptions) -> EdgeList:
+        """The scatter stage's exact input: self loops appended when
+        ``opts.diag_aug``, weights Laplacian-folded when ``opts.laplacian``
+        (degrees of the *augmented* graph, per the shared option order).
+        Keyed on ``(diag_aug, laplacian)`` only -- correlation is pure
+        epilogue and never invalidates prep.
+        """
+        key = ("eff", bool(opts.diag_aug), bool(opts.laplacian))
+
+        def build():
+            e = self.augmented(opts.diag_aug)
+            return _laplacian_fold(e) if opts.laplacian else e
+        return self._memo(key, build)
+
+    def ell(self, diag_aug: bool = False):
+        """Single-plane ELL packing of the (augmented) graph (host-side
+        O(E); by far the most expensive prep artifact -- cache pays)."""
+        from repro.graph.ell import edges_to_ell  # deferred: keep core light
+
+        return self._memo(("ell", bool(diag_aug)),
+                          lambda: edges_to_ell(self.augmented(diag_aug)))
+
+    def bucketed_ell(self, diag_aug: bool = False):
+        """Degree-bucketed ELL packing of the (augmented) graph."""
+        from repro.graph.ell import edges_to_bucketed_ell
+
+        return self._memo(
+            ("bucketed_ell", bool(diag_aug)),
+            lambda: edges_to_bucketed_ell(self.augmented(diag_aug)))
+
+    def chunked(self, chunk_edges: int | None = None):
+        """The streaming backend's chunk manifest over the valid prefix
+        (one manifest per distinct window size)."""
+        from repro.graph.io import DEFAULT_CHUNK_EDGES, ChunkedEdgeList
+
+        chunk = int(chunk_edges or DEFAULT_CHUNK_EDGES)
+        return self._memo(
+            ("chunked", chunk),
+            lambda: ChunkedEdgeList.from_edge_list(self._edges, chunk))
+
+    def host_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Valid-prefix ``(src, dst, weight)`` numpy triple (the SciPy and
+        python-loop backends' input)."""
+        return self._memo(("host",), self._edges.valid_arrays)
+
+
+# ---------------------------------------------------------------------------
+# the cost model behind backend="auto"
+# ---------------------------------------------------------------------------
+
+def estimate_working_set_bytes(graph: PreparedGraph | EdgeList,
+                               num_classes: int) -> int:
+    """Rough in-memory working set of the non-streaming sparse path:
+    base + effective edge triples (src/dst/weight, self loops included),
+    the degree vector, and Z."""
+    edges = graph.base if isinstance(graph, PreparedGraph) else graph
+    e_eff = edges.padded_size + edges.num_nodes      # with self loops
+    edge_bytes = 3 * 4 * (edges.padded_size + e_eff)  # base + effective
+    n = edges.num_nodes
+    return edge_bytes + 4 * n + 4 * n * int(num_classes)
+
+
+def memory_budget_bytes() -> int:
+    """The route-to-chunked threshold: ``REPRO_GEE_MEMORY_BUDGET_BYTES``
+    or a 16 GiB default."""
+    return int(os.environ.get(ENV_MEMORY_BUDGET, DEFAULT_MEMORY_BUDGET))
+
+
+def select_backend(graph: PreparedGraph | EdgeList, num_classes: int, *,
+                   device: str | None = None,
+                   budget_bytes: int | None = None) -> str:
+    """The ``backend="auto"`` cost model.
+
+    1. If the estimated working set exceeds the memory budget, stream:
+       ``chunked`` keeps O(chunk + N*K) whatever E is.
+    2. On a real TPU with K within a few 128-lanes, the Pallas ELL kernel
+       wins the contraction.
+    3. Everywhere else, the O(E) segment-sum path is the safe default (on
+       CPU the kernel would run in interpret mode, strictly slower).
+
+    ``auto`` never selects ``distributed`` or the host reference backends:
+    those change *where the data lives*, which is the caller's decision.
+    """
+    device = device or jax.default_backend()
+    budget = memory_budget_bytes() if budget_bytes is None else budget_bytes
+    if estimate_working_set_bytes(graph, num_classes) > budget:
+        return "chunked"
+    if device == "tpu" and num_classes <= PALLAS_MAX_CLASSES:
+        return "pallas"
+    return "sparse_jax"
+
+
+# ---------------------------------------------------------------------------
+# GEEPlan: resolved stages + executor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlanStage:
+    """One resolved execution stage (introspection / logging surface)."""
+
+    kind: str            # "prep" | "compute" | "epilogue"
+    name: str
+    cached: bool = False  # artifact already resident in the PreparedGraph
+    detail: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class GEEPlan:
+    """An executable embedding plan: resolved backend + staged pipeline.
+
+    Build once with :meth:`build` (which resolves ``backend="auto"``
+    through the cost model), then :meth:`execute` against any labels
+    vector.  All prep flows through the shared :class:`PreparedGraph`, so
+    repeated executions -- other option settings, ensemble replicates,
+    refreshed labels -- reuse every artifact.
+    """
+
+    prepared: PreparedGraph
+    num_classes: int
+    opts: GEEOptions
+    backend: str                      # resolved; never "auto"
+    chunk_edges: Optional[int] = None
+    impl: str = "auto"                # epilogue row-norm impl
+
+    @staticmethod
+    def build(graph: PreparedGraph | EdgeList, num_classes: int,
+              opts: GEEOptions = GEEOptions(), *, backend: str = "auto",
+              device: str | None = None, chunk_edges: int | None = None,
+              budget_bytes: int | None = None,
+              impl: str = "auto") -> "GEEPlan":
+        prepared = PreparedGraph.wrap(graph)
+        if backend == "auto":
+            backend = select_backend(prepared, num_classes, device=device,
+                                     budget_bytes=budget_bytes)
+        if backend not in KNOWN_BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; known: {KNOWN_BACKENDS} "
+                f"(+ 'auto'; 'distributed' needs a mesh -- use GEEEmbedder)")
+        return GEEPlan(prepared=prepared, num_classes=int(num_classes),
+                       opts=opts, backend=backend, chunk_edges=chunk_edges,
+                       impl=impl)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def stages(self) -> Tuple[PlanStage, ...]:
+        p, o = self.prepared, self.opts
+        out = []
+        if self.backend == "sparse_jax":
+            out.append(PlanStage(
+                "prep", "effective_edges",
+                cached=p.is_cached(("eff", o.diag_aug, o.laplacian)),
+                detail="self-loop augment + laplacian fold"))
+            out.append(PlanStage("compute", "segment_scatter",
+                                 detail="flat segment-sum, O(E)"))
+        elif self.backend == "pallas":
+            out.append(PlanStage(
+                "prep", "bucketed_ell",
+                cached=p.is_cached(("bucketed_ell", o.diag_aug)),
+                detail="degree-bucketed ELL packing (host, O(E))"))
+            out.append(PlanStage("compute", "gee_spmm",
+                                 detail="MXU one-hot contraction per bucket"))
+        elif self.backend == "chunked":
+            from repro.graph.io import DEFAULT_CHUNK_EDGES
+
+            chunk = int(self.chunk_edges or DEFAULT_CHUNK_EDGES)
+            out.append(PlanStage("prep", "chunk_manifest",
+                                 cached=p.is_cached(("chunked", chunk)),
+                                 detail=f"window={chunk} edges"))
+            out.append(PlanStage("compute", "two_pass_stream",
+                                 detail="degree fold + per-class fold"))
+        elif self.backend == "dense_jax":
+            out.append(PlanStage("compute", "dense_matmul",
+                                 detail="A @ W oracle, O(N^2)"))
+        else:                          # scipy / python_loop host references
+            out.append(PlanStage("prep", "host_arrays",
+                                 cached=p.is_cached(("host",)),
+                                 detail="valid-prefix numpy triple"))
+            out.append(PlanStage("compute", self.backend))
+        if o.correlation and self.backend not in ("chunked", "dense_jax",
+                                                  "scipy", "python_loop"):
+            out.append(PlanStage("epilogue", "row_l2_normalize",
+                                 detail=f"impl={self.impl}"))
+        return tuple(out)
+
+    def describe(self) -> str:
+        """One line per stage, e.g. for ``--plan`` CLI output."""
+        head = (f"GEEPlan(backend={self.backend}, opts={self.opts.tag()}, "
+                f"N={self.prepared.num_nodes}, "
+                f"E={self.prepared.num_edges}, K={self.num_classes})")
+        lines = [head] + [
+            f"  [{s.kind:8s}] {s.name}"
+            + (" (cached)" if s.cached else "")
+            + (f" -- {s.detail}" if s.detail else "")
+            for s in self.stages]
+        return "\n".join(lines)
+
+    # -- execution -----------------------------------------------------------
+    def execute(self, labels) -> jax.Array:
+        """Run the staged pipeline for one labels vector."""
+        k, o, p = self.num_classes, self.opts, self.prepared
+        if self.backend == "sparse_jax":
+            eff = p.effective_edges(o)
+            # prep already applied: the scatter runs with bare options
+            z = gee_sparse_jax(eff, jnp.asarray(labels), k, GEEOptions())
+            if o.correlation:
+                z = epilogue.row_l2_normalize(z, impl=self.impl)
+            return z
+        if self.backend == "pallas":
+            from repro.kernels.ops import gee_pallas_from_bucketed
+
+            bell = p.bucketed_ell(o.diag_aug)
+            z = gee_pallas_from_bucketed(
+                bell, jnp.asarray(labels), k,
+                GEEOptions(laplacian=o.laplacian))
+            if o.correlation:      # epilogue honors this plan's impl choice
+                z = epilogue.row_l2_normalize(z, impl=self.impl)
+            return z
+        if self.backend == "chunked":
+            from repro.core.chunked import gee_chunked
+
+            return gee_chunked(p.chunked(self.chunk_edges), labels, k, o,
+                               impl=self.impl)
+        if self.backend == "dense_jax":
+            return gee_dense_jax(p.base, jnp.asarray(labels), k, o)
+        src, dst, w = p.host_arrays()
+        y = np.asarray(labels)
+        if self.backend == "scipy":
+            return gee_scipy(src, dst, w, y, k, o, num_nodes=p.num_nodes)
+        assert self.backend == "python_loop"
+        return gee_python_loop(src, dst, w, y, k, o, num_nodes=p.num_nodes)
+
+
+# ---------------------------------------------------------------------------
+# the many-settings fast path (ensemble / --compare sweeps)
+# ---------------------------------------------------------------------------
+
+def sweep_options(graph: PreparedGraph | EdgeList, labels, num_classes: int,
+                  settings: Iterable[GEEOptions] = ALL_OPTION_SETTINGS, *,
+                  backend: str = "sparse_jax", chunk_edges: int | None = None,
+                  impl: str = "auto") -> Mapping[GEEOptions, jax.Array]:
+    """Embed one graph under many option settings with all prep shared.
+
+    Two sharing levels, both exact:
+
+      * every setting reuses the ``PreparedGraph`` artifacts (symmetrized
+        upload, self-loop augmentation, Laplacian fold, packing);
+      * correlation is a pure row postprocess, so settings that differ
+        only in it share the same scatter pass -- the 8 canonical
+        settings cost 4 scatters + 4 row normalizations.
+
+    Returns ``{opts: Z}`` in the order given.
+    """
+    prepared = PreparedGraph.wrap(graph)
+    raw: Dict[Tuple[bool, bool], jax.Array] = {}
+    out: Dict[GEEOptions, jax.Array] = {}
+    for opts in settings:
+        key = (bool(opts.laplacian), bool(opts.diag_aug))
+        if key not in raw:
+            base = GEEOptions(laplacian=opts.laplacian,
+                              diag_aug=opts.diag_aug)
+            raw[key] = GEEPlan.build(
+                prepared, num_classes, base, backend=backend,
+                chunk_edges=chunk_edges, impl=impl).execute(labels)
+        z = raw[key]
+        if opts.correlation:
+            z = epilogue.row_l2_normalize(jnp.asarray(z), impl=impl)
+        out[opts] = z
+    return out
+
+
+Graph = Union[PreparedGraph, EdgeList]
+
+__all__ = ["PreparedGraph", "GEEPlan", "PlanStage", "select_backend",
+           "sweep_options", "estimate_working_set_bytes",
+           "memory_budget_bytes", "KNOWN_BACKENDS", "ENV_MEMORY_BUDGET",
+           "DEFAULT_MEMORY_BUDGET", "PALLAS_MAX_CLASSES"]

@@ -53,6 +53,15 @@ class EdgeList:
     def padded_size(self) -> int:
         return int(self.src.shape[0])
 
+    def valid_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host-side ``(src, dst, weight)`` of the valid (non-padding)
+        prefix -- the canonical way host consumers (SciPy/loop backends,
+        ELL packing, chunk manifests, incremental promotion) strip the
+        padding tail before O(E) host work."""
+        e = self.num_edges
+        return (np.asarray(self.src)[:e], np.asarray(self.dst)[:e],
+                np.asarray(self.weight)[:e])
+
     def with_padding(self, multiple: int) -> "EdgeList":
         """Pad the arrays so E_pad is a multiple of ``multiple``."""
         e = self.padded_size
@@ -182,9 +191,7 @@ class CSRHost:
 
 def edges_to_csr_host(edges: EdgeList) -> CSRHost:
     n = edges.num_nodes
-    src = np.asarray(edges.src)[: edges.num_edges]
-    dst = np.asarray(edges.dst)[: edges.num_edges]
-    w = np.asarray(edges.weight)[: edges.num_edges]
+    src, dst, w = edges.valid_arrays()
     order = np.argsort(src, kind="stable")
     src, dst, w = src[order], dst[order], w[order]
     counts = np.bincount(src, minlength=n)

@@ -94,9 +94,7 @@ def _group_edges_by_row(edges: EdgeList, max_degree: int | None):
     keys + vectorized rank-within-row.
     """
     n = edges.num_nodes
-    src = np.asarray(edges.src)[: edges.num_edges]
-    dst = np.asarray(edges.dst)[: edges.num_edges]
-    w = np.asarray(edges.weight)[: edges.num_edges]
+    src, dst, w = edges.valid_arrays()
     keep = w != 0
     src, dst, w = src[keep], dst[keep], w[keep]
 

@@ -151,11 +151,11 @@ class ChunkedEdgeList:
                        chunk_edges: int = DEFAULT_CHUNK_EDGES,
                        ) -> "ChunkedEdgeList":
         """Wrap an in-memory (already-directed) ``EdgeList``'s valid prefix."""
-        e = edges.num_edges
+        src, dst, w = edges.valid_arrays()
         return ChunkedEdgeList(
-            src=np.asarray(edges.src)[:e], dst=np.asarray(edges.dst)[:e],
-            weight=np.asarray(edges.weight)[:e], num_nodes=edges.num_nodes,
-            chunk_edges=min(max(1, e), chunk_edges), undirected=False)
+            src=src, dst=dst, weight=w, num_nodes=edges.num_nodes,
+            chunk_edges=min(max(1, edges.num_edges), chunk_edges),
+            undirected=False)
 
 
 # ---------------------------------------------------------------------------

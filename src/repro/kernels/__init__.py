@@ -1,3 +1,4 @@
+from repro.kernels.autotune import REGISTRY, AutotuneRegistry
 from repro.kernels.gee_spmm import choose_block_sizes, gee_spmm
 from repro.kernels.row_norm import row_norm
 from repro.kernels.ops import (gee_pallas, gee_pallas_from_bucketed,
@@ -7,4 +8,5 @@ from repro.kernels.topk_score import (gathered_scores, masked_topk,
 
 __all__ = ["gee_spmm", "choose_block_sizes", "row_norm", "gee_pallas",
            "gee_pallas_from_bucketed", "gee_pallas_from_ell",
-           "pairwise_scores", "gathered_scores", "masked_topk"]
+           "pairwise_scores", "gathered_scores", "masked_topk",
+           "REGISTRY", "AutotuneRegistry"]

@@ -1,0 +1,221 @@
+"""Unified block-size autotune registry for every Pallas kernel.
+
+``gee_spmm`` and ``topk_score`` grew the same tuning discipline
+independently: a measured table keyed on pow2 buckets of the operand
+shape, a VMEM-budget formula fallback, and an ``lru_cache`` so a sweep
+over many graph/batch sizes stays within a handful of entries.  This
+module is the one home for that discipline:
+
+  * ``ceil_to`` / ``pow2_at_least``  -- the shape-rounding helpers that
+    were copy-pasted into three kernel files (those files keep
+    deprecated ``_ceil_to`` / ``_pow2_at_least`` aliases).
+  * ``AutotuneRegistry``             -- a keyed store
+    ``(kernel, bucketed-shape) -> block sizes`` that resolves, in order:
+    runtime-recorded measurements, the kernel's seeded table, the
+    kernel's formula fallback.  Every resolution is memoized.
+  * on-disk persistence              -- ``save``/``load`` serialize the
+    *recorded* entries (never the seeded tables or formula results) to
+    JSON, so tuning survives processes.  Set ``REPRO_AUTOTUNE_CACHE`` to
+    a file path and the default registry loads it on first lookup and
+    can be flushed with ``save()``.
+
+A kernel opts in with one ``register`` call; after that, new kernels get
+table + formula + memo + persistence for free:
+
+>>> reg = AutotuneRegistry()
+>>> reg.register("toy", table={(64, 4): (8, 8)},
+...              fallback=lambda key: (key[0] // 2, 4))
+>>> reg.lookup("toy", (64, 4))          # seeded table hit
+(8, 8)
+>>> reg.lookup("toy", (128, 4))         # formula fallback
+(64, 4)
+>>> reg.record("toy", (128, 4), (32, 8))   # a measurement wins over both
+>>> reg.lookup("toy", (128, 4))
+(32, 8)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Dict, Tuple
+
+ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
+
+Key = Tuple[int, ...]
+Value = Tuple[int, ...]
+
+
+def ceil_to(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` >= ``x``."""
+    return ((x + m - 1) // m) * m
+
+
+def pow2_at_least(x: int) -> int:
+    """Smallest power of two >= ``x`` (1 for x <= 1)."""
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def pow2_bucket(*dims: int) -> Key:
+    """Bucket a shape tuple: each dim -> pow2_at_least(max(dim, 1)).
+
+    This is the canonical registry key -- it keeps the cache tiny across
+    a sweep of graph/batch sizes (every size in (2^{i-1}, 2^i] shares an
+    entry).
+    """
+    return tuple(pow2_at_least(max(int(d), 1)) for d in dims)
+
+
+class AutotuneRegistry:
+    """Keyed store of tuned block sizes shared by all kernels.
+
+    Resolution order per ``(kernel, key)``: recorded measurement >
+    seeded table > formula fallback; the result is memoized.  Recorded
+    entries are the only state ``save``/``load`` persist -- seeded
+    tables live in code and formula results are recomputable.
+    """
+
+    def __init__(self):
+        self._tables: Dict[str, Dict[Key, Value]] = {}
+        self._fallbacks: Dict[str, Callable[[Key], Value]] = {}
+        self._recorded: Dict[str, Dict[Key, Value]] = {}
+        self._memo: Dict[Tuple[str, Key], Value] = {}
+        self._loaded_env = False
+
+    # -- kernel opt-in -------------------------------------------------------
+    def register(self, kernel: str, *, fallback: Callable[[Key], Value],
+                 table: Dict[Key, Value] | None = None) -> None:
+        """Declare a kernel's seeded table and formula fallback.
+
+        Re-registering replaces both (and drops the kernel's memo), so a
+        module reload cannot leave stale closures behind; recorded
+        measurements survive.
+        """
+        self._tables[kernel] = dict(table or {})
+        self._fallbacks[kernel] = fallback
+        self._memo = {mk: v for mk, v in self._memo.items()
+                      if mk[0] != kernel}
+
+    def kernels(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._tables))
+
+    # -- resolution ----------------------------------------------------------
+    def lookup(self, kernel: str, key: Key) -> Value:
+        """Resolve block sizes for a *bucketed* key (see ``pow2_bucket``)."""
+        self._maybe_load_env()
+        key = tuple(int(k) for k in key)
+        memo_key = (kernel, key)
+        hit = self._memo.get(memo_key)
+        if hit is not None:
+            return hit
+        if kernel not in self._fallbacks:
+            raise KeyError(f"kernel {kernel!r} not registered "
+                           f"(known: {self.kernels()})")
+        value = self._recorded.get(kernel, {}).get(key)
+        if value is None:
+            value = self._tables[kernel].get(key)
+        if value is None:
+            value = tuple(int(v) for v in self._fallbacks[kernel](key))
+        self._memo[memo_key] = value
+        return value
+
+    def record(self, kernel: str, key: Key, value: Value) -> None:
+        """Store a measured result; it now wins over table and formula."""
+        key = tuple(int(k) for k in key)
+        value = tuple(int(v) for v in value)
+        self._recorded.setdefault(kernel, {})[key] = value
+        self._memo[(kernel, key)] = value
+
+    def recorded(self, kernel: str | None = None) -> dict:
+        """The persistable (measured) entries, for inspection/tests."""
+        if kernel is not None:
+            return dict(self._recorded.get(kernel, {}))
+        return {k: dict(v) for k, v in self._recorded.items()}
+
+    def clear(self, kernel: str | None = None) -> None:
+        """Drop recorded entries (and memo) for one kernel, or all."""
+        if kernel is None:
+            self._recorded.clear()
+            self._memo.clear()
+        else:
+            self._recorded.pop(kernel, None)
+            self._memo = {mk: v for mk, v in self._memo.items()
+                          if mk[0] != kernel}
+
+    # -- persistence ---------------------------------------------------------
+    @staticmethod
+    def default_path() -> str | None:
+        """The ``REPRO_AUTOTUNE_CACHE`` env path, or None when unset."""
+        return os.environ.get(ENV_CACHE_PATH) or None
+
+    @staticmethod
+    def _read_file(path: str) -> Dict[str, Dict[Key, Value]]:
+        """Parse a cache file into {kernel: {key: value}} ({} if absent)."""
+        if not os.path.exists(path):
+            return {}
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            # empty/corrupt cache (e.g. an interrupted write): tuning is
+            # advisory, never worth failing a run over
+            return {}
+        return {
+            kernel: {tuple(int(x) for x in k.split(",")):
+                     tuple(int(x) for x in v)
+                     for k, v in entries.items()}
+            for kernel, entries in data.get("recorded", {}).items()
+        }
+
+    def save(self, path: str | None = None) -> str | None:
+        """Write recorded entries as JSON.  ``path=None`` uses the env
+        default; returns the path written, or None when there is none.
+
+        Merge-on-write: entries already in the file (persisted by other
+        processes and possibly never looked up here) are kept; this
+        registry's recorded entries win on key collisions.
+        """
+        path = path or self.default_path()
+        if path is None:
+            return None
+        merged = self._read_file(path)
+        for kernel, entries in self._recorded.items():
+            merged.setdefault(kernel, {}).update(entries)
+        payload = {
+            kernel: {",".join(map(str, k)): list(v)
+                     for k, v in entries.items()}
+            for kernel, entries in merged.items() if entries
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "recorded": payload}, f, indent=0)
+        os.replace(tmp, path)
+        return path
+
+    def load(self, path: str | None = None) -> int:
+        """Merge a JSON cache file in (file entries win over existing
+        ones).  Missing file is a no-op.  Returns entries loaded."""
+        path = path or self.default_path()
+        if path is None:
+            return 0
+        count = 0
+        for kernel, entries in self._read_file(path).items():
+            for k, v in entries.items():
+                self.record(kernel, k, v)
+                count += 1
+        return count
+
+    def _maybe_load_env(self) -> None:
+        if not self._loaded_env:
+            self._loaded_env = True
+            self.load()
+
+
+# The process-wide registry every kernel registers into.
+REGISTRY = AutotuneRegistry()
+
+__all__ = ["AutotuneRegistry", "REGISTRY", "ceil_to", "pow2_at_least",
+           "pow2_bucket", "ENV_CACHE_PATH"]

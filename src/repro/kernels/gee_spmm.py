@@ -32,24 +32,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.autotune import (REGISTRY, ceil_to, pow2_at_least,
+                                    pow2_bucket)
+
 LANE = 128          # TPU lane width: last-dim alignment unit
 SUBLANE = 8         # f32 sublane height
 _VREG_BUDGET = 4 * 1024 * 1024   # cap for the [R, deg_sub, K] one-hot live set
 
-
-def _ceil_to(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
-def _pow2_at_least(x: int) -> int:
-    p = 1
-    while p < x:
-        p *= 2
-    return p
+# Deprecated aliases: these helpers moved to ``repro.kernels.autotune``
+# (``ceil_to`` / ``pow2_at_least``); kept so external callers of the old
+# private names keep working.
+_ceil_to = ceil_to
+_pow2_at_least = pow2_at_least
 
 
 # ---------------------------------------------------------------------------
-# block-size autotuning
+# block-size autotuning (via the shared repro.kernels.autotune registry)
 # ---------------------------------------------------------------------------
 #
 # Keyed on pow2-bucketed (N, max degree, K) so the cache stays tiny across a
@@ -76,35 +74,43 @@ def choose_block_sizes(n: int, max_degree: int,
                        num_classes: int) -> tuple[int, int, int]:
     """Heuristic (block_rows, block_deg, deg_sub) for a [n, max_degree] plane.
 
-    Cached per pow2 bucket of the key (so a sweep over many graph sizes
-    stays within a handful of cache entries); consults the measured table
-    first and falls back to a VMEM-budget formula.  The result is then
+    Resolved through the shared ``repro.kernels.autotune.REGISTRY``
+    (memoized per pow2 bucket of the key, so a sweep over many graph sizes
+    stays within a handful of cache entries): recorded measurements win,
+    then the seeded table, then the VMEM-budget formula.  The result is
     clamped so tiles never exceed the actual (padded) plane.
     """
-    block_rows, block_deg, deg_sub = _choose_block_sizes_bucketed(
-        _pow2_at_least(max(n, 1)), _pow2_at_least(max(max_degree, 1)),
-        _pow2_at_least(max(num_classes, 1)))
-    block_rows = min(block_rows, _ceil_to(max(n, 1), SUBLANE))
-    block_deg = min(block_deg, _ceil_to(max(max_degree, 1), SUBLANE))
+    block_rows, block_deg, deg_sub = REGISTRY.lookup(
+        KERNEL_NAME, pow2_bucket(n, max_degree, num_classes))
+    block_rows = min(block_rows, ceil_to(max(n, 1), SUBLANE))
+    block_deg = min(block_deg, ceil_to(max(max_degree, 1), SUBLANE))
     deg_sub = min(deg_sub, block_deg)
     return block_rows, block_deg, deg_sub
 
 
-@functools.lru_cache(maxsize=512)
+def _block_sizes_formula(key: tuple[int, ...]) -> tuple[int, int, int]:
+    """VMEM-budget fallback on pow2-bucketed (N, D, K): row tiles cap at
+    256, degree tiles stop at one LANE, and deg_sub is sized so the
+    [rows, deg_sub, K] one-hot intermediate stays under _VREG_BUDGET."""
+    n_b, d_b, k_b = key
+    block_rows = min(256, ceil_to(n_b, SUBLANE))
+    block_deg = min(LANE, ceil_to(d_b, SUBLANE))
+    k_pad = ceil_to(k_b, LANE)
+    deg_sub = max(_VREG_BUDGET // (block_rows * k_pad * 4), 1)
+    deg_sub = min(pow2_at_least(deg_sub + 1) // 2, block_deg, 32)
+    return block_rows, block_deg, deg_sub
+
+
+KERNEL_NAME = "gee_spmm"
+REGISTRY.register(KERNEL_NAME, table=_TUNED_TABLE,
+                  fallback=_block_sizes_formula)
+
+
 def _choose_block_sizes_bucketed(n_b: int, d_b: int,
                                  k_b: int) -> tuple[int, int, int]:
-    """Table lookup / VMEM-budget formula on pow2-bucketed (N, D, K): row
-    tiles cap at 256, degree tiles stop at one LANE, and deg_sub is sized so
-    the [rows, deg_sub, K] one-hot intermediate stays under _VREG_BUDGET."""
-    hit = _TUNED_TABLE.get((n_b, d_b, k_b))
-    if hit is not None:
-        return hit
-    block_rows = min(256, _ceil_to(n_b, SUBLANE))
-    block_deg = min(LANE, _ceil_to(d_b, SUBLANE))
-    k_pad = _ceil_to(k_b, LANE)
-    deg_sub = max(_VREG_BUDGET // (block_rows * k_pad * 4), 1)
-    deg_sub = min(_pow2_at_least(deg_sub + 1) // 2, block_deg, 32)
-    return block_rows, block_deg, deg_sub
+    """Deprecated: resolve through ``repro.kernels.autotune.REGISTRY``
+    (kept so external callers of the old private name keep working)."""
+    return REGISTRY.lookup(KERNEL_NAME, (n_b, d_b, k_b))
 
 
 def _gee_spmm_kernel(ylab_ref, contrib_ref, out_ref, *, num_classes_pad: int,

@@ -2,7 +2,9 @@
 
 ``gee_pallas`` mirrors the semantics of ``repro.core.gee.gee_sparse_jax``
 exactly (same options, same -1-label convention) but routes the contraction
-through the ``gee_spmm`` kernel and the correlation step through ``row_norm``.
+through the ``gee_spmm`` kernel and the correlation step through the shared
+epilogue's Pallas path (``repro.core.epilogue.row_l2_normalize`` with
+``impl="pallas"``, i.e. the ``row_norm`` kernel).
 On CPU the kernels run in interpret mode (Python evaluation of the kernel
 body); on TPU the same code compiles to Mosaic.
 
@@ -21,12 +23,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.epilogue import inv_sqrt_degrees, row_l2_normalize
 from repro.core.gee import GEEOptions, class_weight_inv
 from repro.graph.containers import ELL, EdgeList, add_self_loops
 from repro.graph.ell import (BucketedELL, edges_to_bucketed_ell, edges_to_ell,
                              ell_planes)
 from repro.kernels.gee_spmm import choose_block_sizes, gee_spmm
-from repro.kernels.row_norm import row_norm
 
 
 def _interpret_default() -> bool:
@@ -47,7 +49,7 @@ def gee_pallas_from_ell(ell: ELL, labels: jax.Array, num_classes: int,
 
     if opts.laplacian:
         deg = jnp.sum(vals, axis=1)                       # padded rows -> 0
-        dinv = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
+        dinv = inv_sqrt_degrees(deg)
         deg_dst = dinv[jnp.clip(cols, 0, n - 1)]
         vals = vals * dinv[:vals.shape[0], None] * deg_dst
 
@@ -56,7 +58,7 @@ def gee_pallas_from_ell(ell: ELL, labels: jax.Array, num_classes: int,
     z = gee_spmm(ylab, contrib, num_classes, block_rows=block_rows,
                  block_deg=block_deg, deg_sub=None, interpret=interpret)[:n]
     if opts.correlation:
-        z = row_norm(z, interpret=interpret)
+        z = row_l2_normalize(z, impl="pallas", interpret=interpret)
     return z
 
 
@@ -84,7 +86,7 @@ def gee_pallas_from_bucketed(bell: BucketedELL, labels: jax.Array,
         for b in bell.buckets:
             deg = deg.at[b.row_ids].add(jnp.sum(b.vals, axis=1))
         deg = deg[:n]
-        dinv = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
+        dinv = inv_sqrt_degrees(deg)
 
     z = jnp.zeros((n + 1, num_classes), jnp.float32)
     for b in bell.buckets:
@@ -103,7 +105,7 @@ def gee_pallas_from_bucketed(bell: BucketedELL, labels: jax.Array,
         z = z.at[b.row_ids].add(out)
     z = z[:n]
     if opts.correlation:
-        z = row_norm(z, interpret=interpret)
+        z = row_l2_normalize(z, impl="pallas", interpret=interpret)
     return z
 
 

@@ -14,11 +14,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.autotune import ceil_to
+
 LANE = 128
 
-
-def _ceil_to(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
+# Deprecated alias: moved to ``repro.kernels.autotune.ceil_to``; kept for
+# external callers of the old private name.
+_ceil_to = ceil_to
 
 
 def _row_norm_kernel(z_ref, out_ref, *, eps: float):
@@ -28,7 +30,8 @@ def _row_norm_kernel(z_ref, out_ref, *, eps: float):
     out_ref[...] = jnp.where(norm > 0, z / jnp.maximum(norm, eps), 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps",
+                                             "interpret"))
 def row_norm(z: jax.Array, block_rows: int = 512, eps: float = 1e-30,
              interpret: bool = True) -> jax.Array:
     """Row-wise L2 normalize [N, K] -> [N, K] f32; zero rows stay zero."""

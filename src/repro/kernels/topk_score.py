@@ -41,6 +41,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.autotune import (REGISTRY, ceil_to, pow2_at_least,
+                                    pow2_bucket)
+
 LANE = 128          # TPU lane width: last-dim alignment unit
 SUBLANE = 8         # f32 sublane height
 NEG_INF = float(np.finfo(np.float32).min)   # masked-slot score (finite, so
@@ -50,16 +53,10 @@ _COS_EPS = 1e-30
 
 METRICS = ("l2", "cosine")
 
-
-def _ceil_to(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
-def _pow2_at_least(x: int) -> int:
-    p = 1
-    while p < x:
-        p *= 2
-    return p
+# Deprecated aliases: moved to ``repro.kernels.autotune`` (``ceil_to`` /
+# ``pow2_at_least``); kept for external callers of the old private names.
+_ceil_to = ceil_to
+_pow2_at_least = pow2_at_least
 
 
 def _check_metric(metric: str):
@@ -78,8 +75,8 @@ def _resolve_impl(impl: str) -> str:
 
 
 # ---------------------------------------------------------------------------
-# block-size autotuning (same discipline as gee_spmm: pow2-bucketed table
-# + budget-formula fallback, lru_cached)
+# block-size autotuning (the shared repro.kernels.autotune registry:
+# pow2-bucketed table + budget-formula fallback, memoized + persistable)
 # ---------------------------------------------------------------------------
 
 # (q_bucket, m_bucket, k_bucket) -> (block_q, block_m)
@@ -105,28 +102,12 @@ _GATHERED_TABLE = {
 }
 
 
-def choose_pairwise_blocks(num_queries: int, num_points: int,
-                           dim: int) -> tuple[int, int]:
-    """(block_q, block_m) for the shared-database kernel, clamped to the
-    actual (padded) operand sizes."""
-    bq, bm = _choose_pairwise_bucketed(
-        _pow2_at_least(max(num_queries, 1)),
-        _pow2_at_least(max(num_points, 1)),
-        _pow2_at_least(max(dim, 1)))
-    bq = min(bq, _ceil_to(max(num_queries, 1), SUBLANE))
-    bm = min(bm, _ceil_to(max(num_points, 1), SUBLANE))
-    return bq, bm
-
-
-@functools.lru_cache(maxsize=512)
-def _choose_pairwise_bucketed(q_b: int, m_b: int, k_b: int) -> tuple[int, int]:
-    hit = _PAIRWISE_TABLE.get((q_b, m_b, k_b))
-    if hit is not None:
-        return hit
+def _pairwise_formula(key: tuple[int, ...]) -> tuple[int, int]:
+    q_b, m_b, k_b = key
     # tiles: q [bq, K] + x [bm, K] + out [bq, bm]; K is lane-padded.
-    block_q = min(128, _ceil_to(q_b, SUBLANE))
-    block_m = min(512, _ceil_to(m_b, SUBLANE))
-    k_pad = _ceil_to(k_b, LANE)
+    block_q = min(128, ceil_to(q_b, SUBLANE))
+    block_m = min(512, ceil_to(m_b, SUBLANE))
+    k_pad = ceil_to(k_b, LANE)
     while block_m > SUBLANE and \
             (block_q + block_m) * k_pad * 4 + block_q * block_m * 4 \
             > _VMEM_BUDGET:
@@ -134,30 +115,44 @@ def _choose_pairwise_bucketed(q_b: int, m_b: int, k_b: int) -> tuple[int, int]:
     return block_q, max(block_m, SUBLANE)
 
 
+def _gathered_formula(key: tuple[int, ...]) -> tuple[int, int]:
+    q_b, m_b, k_b = key
+    k_pad = ceil_to(k_b, LANE)
+    block_q = min(16, ceil_to(q_b, SUBLANE))
+    block_m = min(512, ceil_to(m_b, LANE))
+    while block_m > LANE and block_q * block_m * k_pad * 4 > _VMEM_BUDGET:
+        block_m //= 2
+    return block_q, max(block_m, SUBLANE)
+
+
+PAIRWISE_KERNEL = "topk_pairwise"
+GATHERED_KERNEL = "topk_gathered"
+REGISTRY.register(PAIRWISE_KERNEL, table=_PAIRWISE_TABLE,
+                  fallback=_pairwise_formula)
+REGISTRY.register(GATHERED_KERNEL, table=_GATHERED_TABLE,
+                  fallback=_gathered_formula)
+
+
+def choose_pairwise_blocks(num_queries: int, num_points: int,
+                           dim: int) -> tuple[int, int]:
+    """(block_q, block_m) for the shared-database kernel, clamped to the
+    actual (padded) operand sizes."""
+    bq, bm = REGISTRY.lookup(PAIRWISE_KERNEL,
+                             pow2_bucket(num_queries, num_points, dim))
+    bq = min(bq, ceil_to(max(num_queries, 1), SUBLANE))
+    bm = min(bm, ceil_to(max(num_points, 1), SUBLANE))
+    return bq, bm
+
+
 def choose_gathered_blocks(num_queries: int, num_cand: int,
                            dim: int) -> tuple[int, int]:
     """(block_q, block_m) for the per-query-candidates kernel; the 3D
     [bq, bm, K] candidate block dominates VMEM, so it drives the budget."""
-    bq, bm = _choose_gathered_bucketed(
-        _pow2_at_least(max(num_queries, 1)),
-        _pow2_at_least(max(num_cand, 1)),
-        _pow2_at_least(max(dim, 1)))
-    bq = min(bq, _ceil_to(max(num_queries, 1), SUBLANE))
-    bm = min(bm, _ceil_to(max(num_cand, 1), SUBLANE))
+    bq, bm = REGISTRY.lookup(GATHERED_KERNEL,
+                             pow2_bucket(num_queries, num_cand, dim))
+    bq = min(bq, ceil_to(max(num_queries, 1), SUBLANE))
+    bm = min(bm, ceil_to(max(num_cand, 1), SUBLANE))
     return bq, bm
-
-
-@functools.lru_cache(maxsize=512)
-def _choose_gathered_bucketed(q_b: int, m_b: int, k_b: int) -> tuple[int, int]:
-    hit = _GATHERED_TABLE.get((q_b, m_b, k_b))
-    if hit is not None:
-        return hit
-    k_pad = _ceil_to(k_b, LANE)
-    block_q = min(16, _ceil_to(q_b, SUBLANE))
-    block_m = min(512, _ceil_to(m_b, LANE))
-    while block_m > LANE and block_q * block_m * k_pad * 4 > _VMEM_BUDGET:
-        block_m //= 2
-    return block_q, max(block_m, SUBLANE)
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.core.gee import GEEOptions, gee
+from repro.core.plan import GEEPlan, PreparedGraph
 from repro.graph.datasets import TABLE2, load
 from repro.graph.sbm import sample_sbm
 
@@ -56,7 +57,9 @@ def main(argv=None):
     ap.add_argument("--diag", action="store_true")
     ap.add_argument("--cor", action="store_true")
     ap.add_argument("--compare", action="store_true",
-                    help="time all backends")
+                    help="time all backends (prep shared via PreparedGraph)")
+    ap.add_argument("--plan", action="store_true",
+                    help="print the resolved GEEPlan stages per backend")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -114,6 +117,10 @@ def main(argv=None):
     backends = (("sparse_jax", "chunked", "pallas", "auto", "dense_jax",
                  "scipy", "python_loop")
                 if args.compare else (args.backend,))
+    # One PreparedGraph for every cell: symmetrized upload, self-loop
+    # augmentation, laplacian fold, ELL packing and the chunk manifest are
+    # derived once and shared across the whole comparison.
+    prep = PreparedGraph.wrap(edges)
     for b in backends:
         if b == "python_loop" and edges.num_edges > 3_000_000:
             print(f"  {b:12s}: skipped (too slow at this size)")
@@ -123,16 +130,17 @@ def main(argv=None):
             print(f"  {b:12s}: skipped (interpret mode off-TPU; "
                   f"run with --backend pallas to force)")
             continue
-        if b == "pallas":
-            from repro.kernels.ops import gee_pallas
-            fn = lambda: gee_pallas(edges, labels, k, opts)
-        elif b == "chunked" and args.chunk_edges:
+        if args.plan:
+            plan = GEEPlan.build(prep, k, opts, backend=b,
+                                 chunk_edges=args.chunk_edges)
+            print("\n".join("  " + ln for ln in
+                            plan.describe().splitlines()))
+        if b == "chunked" and args.chunk_edges:
             from repro.core.chunked import gee_chunked
-            from repro.graph.io import ChunkedEdgeList
-            ch = ChunkedEdgeList.from_edge_list(edges, args.chunk_edges)
-            fn = lambda: gee_chunked(ch, labels, k, opts)
+            fn = lambda: gee_chunked(prep.chunked(args.chunk_edges),
+                                     labels, k, opts)
         else:
-            fn = lambda: gee(edges, labels, k, opts, backend=b)
+            fn = lambda: gee(prep, labels, k, opts, backend=b)
         dt = _time(fn)
         z = np.asarray(fn())
         print(f"  {b:12s}: {dt*1e3:9.1f} ms   Z[{z.shape[0]}x{z.shape[1]}] "

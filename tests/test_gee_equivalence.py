@@ -88,6 +88,36 @@ def test_diag_aug_equals_manual_self_loops(sbm_small):
     np.testing.assert_allclose(z_opt, z_man, atol=1e-6)
 
 
+def test_near_zero_norm_rows_agree_across_backends():
+    """Correlation epsilon regression.  The float64 host backends (scipy,
+    python_loop) used to renormalize denormal-scale rows to unit norm
+    (scipy clamped at 1e-300, the loop not at all) while every float32
+    backend underflows the same row to ~0 -- an O(1) cross-backend
+    divergence.  With the shared EPS_NORM clamp the float64 backends now
+    return a near-zero row too, inside the 1e-5 equivalence band."""
+    from repro.core.epilogue import EPS_NORM
+
+    # star around node 0 with a subnormal-float32 edge weight: the row
+    # norm sits far below EPS_NORM in float64 and underflows in float32
+    w_tiny = np.float32(3e-36)
+    edges = symmetrize(edge_list_from_numpy(
+        np.array([0, 0, 3]), np.array([1, 2, 4]),
+        np.array([w_tiny, w_tiny, 1.0], np.float32), 5))
+    labels = np.array([0, 1, 1, 0, 1], np.int32)
+    opts = GEEOptions(correlation=True)
+    ref = np.asarray(gee(edges, labels, 2, opts, backend="sparse_jax"))
+    for backend in ("scipy", "python_loop", "dense_jax", "chunked"):
+        out = np.asarray(gee(edges, labels, 2, opts, backend=backend))
+        np.testing.assert_allclose(out, ref, atol=1e-5, err_msg=backend)
+        # the clamp caps the row at |z| = w / EPS_NORM << 1: no backend
+        # may renormalize it to unit scale anymore
+        assert np.linalg.norm(out[0]) < 1e-3, backend
+    # ordinary rows still renormalize to exactly unit scale
+    z_scipy = np.asarray(gee(edges, labels, 2, opts, backend="scipy"))
+    assert abs(np.linalg.norm(z_scipy[3]) - 1.0) < 1e-5
+    assert EPS_NORM == 1e-30
+
+
 def test_weighted_graph_backends_agree():
     rng = np.random.default_rng(0)
     n, e = 200, 900
