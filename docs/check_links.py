@@ -13,6 +13,10 @@ Checked, all offline:
      from the code it maps.
   3. Plain code-span file references like ``benchmarks/foo.py`` or
      ``repro/core/gee.py`` exist on disk.
+  4. Doctest coverage drift: every module under ``src/repro`` that carries
+     doctests (``>>>`` lines) must appear in the ``--doctest-modules``
+     file list of the CI docs job -- otherwise its examples silently stop
+     being executed.
 
 External http(s) links are ignored (CI has no network guarantee).
 
@@ -111,17 +115,62 @@ def check_file(md_rel: str) -> list:
     return errors
 
 
+DOCTEST_RE = re.compile(r"^\s*>>> ", re.MULTILINE)
+CI_WORKFLOW = os.path.join(".github", "workflows", "ci.yml")
+
+
+def doctest_modules_on_disk() -> list:
+    """Repo-relative paths of every src/repro module containing doctests."""
+    out = []
+    root = os.path.join(REPO, "src", "repro")
+    for dirpath, _dirs, files in os.walk(root):
+        for f in sorted(files):
+            if not f.endswith(".py"):
+                continue
+            p = os.path.join(dirpath, f)
+            with open(p) as fh:
+                if DOCTEST_RE.search(fh.read()):
+                    out.append(os.path.relpath(p, REPO))
+    return sorted(out)
+
+
+def check_doctest_coverage() -> list:
+    """Fail when a doctest-bearing module is missing from the CI docs
+    job's ``--doctest-modules`` list (its examples would silently stop
+    running)."""
+    wf = os.path.join(REPO, CI_WORKFLOW)
+    if not os.path.exists(wf):
+        return [f"{CI_WORKFLOW}: workflow file missing"]
+    with open(wf) as f:
+        text = f.read()
+    if "--doctest-modules" not in text:
+        return [f"{CI_WORKFLOW}: no --doctest-modules step found"]
+    listed = set(re.findall(r"src/repro/[\w./-]+\.py", text))
+    errors = []
+    for mod in doctest_modules_on_disk():
+        if mod.replace(os.sep, "/") not in listed:
+            errors.append(f"{CI_WORKFLOW}: {mod} has doctests but is not in "
+                          f"the docs job's --doctest-modules list")
+    for mod in sorted(listed):
+        if not os.path.exists(os.path.join(REPO, mod)):
+            errors.append(f"{CI_WORKFLOW}: --doctest-modules lists {mod}, "
+                          f"which does not exist")
+    return errors
+
+
 def main() -> int:
     errors = []
     for md in MD_FILES:
         errors.extend(check_file(md))
+    errors.extend(check_doctest_coverage())
     for e in errors:
         print(f"ERROR {e}")
     n_files = len(MD_FILES)
     if errors:
         print(f"{len(errors)} broken reference(s) across {n_files} files")
         return 1
-    print(f"all references OK across {n_files} markdown files")
+    print(f"all references OK across {n_files} markdown files; doctest "
+          f"coverage in sync with {CI_WORKFLOW}")
     return 0
 
 

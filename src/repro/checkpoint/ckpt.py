@@ -72,6 +72,46 @@ def available_steps(directory: str) -> list[int]:
     return sorted(steps)
 
 
+def restore_arrays(directory: str, step: int,
+                   verify: bool = False) -> tuple[dict, dict]:
+    """Load checkpoint ``step`` as a flat ``{leaf-path: np.ndarray}`` dict.
+
+    Unlike :func:`restore`, no ``like_tree`` is needed -- shapes and dtypes
+    come from the manifest.  This is the entry point for consumers whose
+    state shape is only known at save time (the serving snapshots in
+    ``repro.serve.snapshot``: N, E and index bucket capacity all vary).
+
+    ``verify=True`` recomputes the payload digest (same formula as
+    :func:`save`) and cross-checks every leaf's shape/dtype against the
+    manifest, raising ``ValueError`` on any mismatch -- the corrupt /
+    partial-write rejection gate crash recovery relies on to fall back to
+    an older snapshot.
+    """
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays: dict[str, np.ndarray] = {}
+    h = hashlib.sha256()
+    for name, entry in sorted(manifest["index"].items()):
+        try:
+            arr = np.load(os.path.join(path, entry["file"]))
+        except Exception as e:               # truncated / unreadable leaf
+            raise ValueError(f"checkpoint {path}: unreadable leaf {name}: "
+                             f"{e}") from e
+        if verify and (list(arr.shape) != entry["shape"]
+                       or str(arr.dtype) != entry["dtype"]):
+            raise ValueError(f"checkpoint {path}: leaf {name} has "
+                             f"{arr.shape}/{arr.dtype}, manifest says "
+                             f"{entry['shape']}/{entry['dtype']}")
+        arrays[name] = arr
+        h.update(name.encode())
+        h.update(arr.tobytes()[:4096])
+    if verify and h.hexdigest() != manifest.get("digest"):
+        raise ValueError(f"checkpoint {path} failed digest verification "
+                         f"(corrupt or partially written)")
+    return arrays, manifest["extra"]
+
+
 def restore(directory: str, step: int, like_tree, shardings=None):
     """Load checkpoint ``step`` shaped like ``like_tree`` (abstract ok).
 

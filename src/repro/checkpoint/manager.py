@@ -14,6 +14,7 @@ and before reading back a checkpoint).
 
 from __future__ import annotations
 
+import json
 import math
 import queue
 import threading
@@ -104,6 +105,23 @@ class CheckpointManager:
         tree, extra = ckpt.restore(self.directory, step, like_tree,
                                    shardings)
         return step, tree, extra
+
+    def restore_latest_arrays(self, verify: bool = True):
+        """Newest checkpoint as a flat ``{leaf-path: array}`` dict, walking
+        back past corrupt/partial snapshots (``verify=True`` rejects them
+        via the manifest digest) to the newest *loadable* one.  Returns
+        ``(step, arrays, extra)`` or ``(None, None, {})``.  This is the
+        crash-recovery entry point: no ``like_tree`` needed, and a torn
+        write of the newest snapshot costs one retention slot, not the
+        ability to recover."""
+        for step in reversed(ckpt.available_steps(self.directory)):
+            try:
+                arrays, extra = ckpt.restore_arrays(self.directory, step,
+                                                    verify=verify)
+                return step, arrays, extra
+            except (ValueError, OSError, json.JSONDecodeError):
+                continue                       # fall back to the previous one
+        return None, None, {}
 
 
 class StragglerMonitor:

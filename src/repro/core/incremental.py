@@ -132,9 +132,14 @@ class IncrementalGEE:
         self._dirty_rows: set[int] = set()
         self._winv_dirty = False
         self._dirty_listeners: list = []
+        # Highest applied delta sequence number (-1 = nothing sequenced).
+        # Sequenced batches at or below the watermark are skipped, making
+        # write-ahead-log replay idempotent (repro.serve.snapshot).
+        self.applied_seq = -1
         self.stats = {
             "edge_deltas": 0, "label_deltas": 0, "rows_recomputed": 0,
             "row_edges_scanned": 0, "z_rows_patched": 0, "z_full_refreshes": 0,
+            "skipped_replays": 0,
         }
 
     # -- construction --------------------------------------------------------
@@ -273,6 +278,20 @@ class IncrementalGEE:
             self.in_nbrs[v][u] = nw
 
     # -- delta application ---------------------------------------------------
+    def _seq_skip(self, delta) -> bool:
+        """True when a sequenced batch is at/below the watermark (already
+        applied -- a WAL replay duplicate; skipping keeps replay exact)."""
+        seq = getattr(delta, "seq", -1)
+        if 0 <= seq <= self.applied_seq:
+            self.stats["skipped_replays"] += 1
+            return True
+        return False
+
+    def _seq_advance(self, delta) -> None:
+        seq = getattr(delta, "seq", -1)
+        if seq >= 0:
+            self.applied_seq = seq
+
     def apply(self, delta: Delta | Sequence[Delta]) -> "IncrementalGEE":
         if isinstance(delta, EdgeDelta):
             return self.apply_edges(delta)
@@ -285,6 +304,8 @@ class IncrementalGEE:
         raise TypeError(f"unsupported delta type {type(delta).__name__}")
 
     def apply_edges(self, delta: EdgeDelta) -> "IncrementalGEE":
+        if self._seq_skip(delta):
+            return self
         d = delta.num_deltas
         u = np.asarray(delta.src)[:d]
         v = np.asarray(delta.dst)[:d]
@@ -299,6 +320,7 @@ class IncrementalGEE:
                              "sentinel id)")
         self.stats["edge_deltas"] += int(u.size)
         if not u.size:
+            self._seq_advance(delta)       # an all-padding batch still counts
             return self
 
         deg_before = self.deg[u].copy()
@@ -327,10 +349,13 @@ class IncrementalGEE:
             self._recompute_rows(affected)
             touched = affected
         self._dirty_rows.update(touched)
+        self._seq_advance(delta)
         self._notify_dirty(np.fromiter(touched, np.int64, len(touched)))
         return self
 
     def apply_labels(self, delta: LabelDelta) -> "IncrementalGEE":
+        if self._seq_skip(delta):
+            return self
         d = delta.num_deltas
         nodes = np.asarray(delta.node)[:d]
         labs = np.asarray(delta.new_label)[:d]
@@ -378,6 +403,7 @@ class IncrementalGEE:
                     self.S[nd, nl] += dh
                 self._dirty_rows.add(nd)
                 dirtied.add(nd)
+        self._seq_advance(delta)
         if any_flip:
             # the 1/n_k column rescale touches every row with mass in the
             # affected classes -- full invalidation, matching

@@ -21,6 +21,14 @@ batches into one minimal batch (sum duplicate (src, dst) increments; last
 write wins per node) -- the serving queue uses them so a burst of updates
 costs one state update.
 
+Every batch carries an optional **sequence number** ``seq`` (static, -1 =
+unsequenced).  The durability layer (``repro.serve.snapshot``) stamps each
+logged batch with a monotonically increasing seq; ``IncrementalGEE`` records
+the highest applied seq as its *watermark* and skips batches at or below it,
+so write-ahead-log replay after crash recovery is idempotent (at-least-once
+delivery is safe).  Coalescing keeps the highest input seq; symmetrizing and
+padding preserve it.
+
 >>> import numpy as np
 >>> d = edge_delta_from_numpy(np.array([3]), np.array([9]),
 ...                           np.array([1.0]))      # insert edge {3, 9}
@@ -57,12 +65,14 @@ class EdgeDelta:
       dst:     [D_pad] int32 destination node ids (0 in padding slots).
       weight:  [D_pad] float32 weight increments (0 == padding/no-op).
       num_deltas: static int, number of valid entries.
+      seq:     static int, replay sequence number (-1 = unsequenced).
     """
 
     src: jax.Array
     dst: jax.Array
     weight: jax.Array
     num_deltas: int = dataclasses.field(metadata=dict(static=True))
+    seq: int = dataclasses.field(default=-1, metadata=dict(static=True))
 
     @property
     def padded_size(self) -> int:
@@ -80,6 +90,7 @@ class EdgeDelta:
             dst=jnp.concatenate([self.dst, jnp.zeros((pad,), jnp.int32)]),
             weight=jnp.concatenate([self.weight, jnp.zeros((pad,), jnp.float32)]),
             num_deltas=self.num_deltas,
+            seq=self.seq,
         )
 
 
@@ -92,11 +103,13 @@ class LabelDelta:
       node:      [D_pad] int32 node ids (-1 in padding slots).
       new_label: [D_pad] int32 new labels, -1 = unknown (0 in padding slots).
       num_deltas: static int, number of valid entries.
+      seq:       static int, replay sequence number (-1 = unsequenced).
     """
 
     node: jax.Array
     new_label: jax.Array
     num_deltas: int = dataclasses.field(metadata=dict(static=True))
+    seq: int = dataclasses.field(default=-1, metadata=dict(static=True))
 
     @property
     def padded_size(self) -> int:
@@ -113,11 +126,13 @@ class LabelDelta:
             new_label=jnp.concatenate([self.new_label,
                                        jnp.zeros((pad,), jnp.int32)]),
             num_deltas=self.num_deltas,
+            seq=self.seq,
         )
 
 
 def edge_delta_from_numpy(src, dst, weight=None,
-                          pad_to: int | None = None) -> EdgeDelta:
+                          pad_to: int | None = None,
+                          seq: int = -1) -> EdgeDelta:
     src = np.asarray(src, np.int32)
     dst = np.asarray(dst, np.int32)
     if weight is None:
@@ -130,11 +145,12 @@ def edge_delta_from_numpy(src, dst, weight=None,
     w = np.zeros((size,), np.float32)
     s[:d], t[:d], w[:d] = src, dst, weight
     return EdgeDelta(src=jnp.asarray(s), dst=jnp.asarray(t),
-                     weight=jnp.asarray(w), num_deltas=int(d))
+                     weight=jnp.asarray(w), num_deltas=int(d), seq=int(seq))
 
 
 def label_delta_from_numpy(node, new_label,
-                           pad_to: int | None = None) -> LabelDelta:
+                           pad_to: int | None = None,
+                           seq: int = -1) -> LabelDelta:
     node = np.asarray(node, np.int32)
     new_label = np.asarray(new_label, np.int32)
     d = node.shape[0]
@@ -143,7 +159,7 @@ def label_delta_from_numpy(node, new_label,
     lb = np.zeros((size,), np.int32)
     nd[:d], lb[:d] = node, new_label
     return LabelDelta(node=jnp.asarray(nd), new_label=jnp.asarray(lb),
-                      num_deltas=int(d))
+                      num_deltas=int(d), seq=int(seq))
 
 
 def symmetrize_delta(delta: EdgeDelta) -> EdgeDelta:
@@ -163,6 +179,7 @@ def symmetrize_delta(delta: EdgeDelta) -> EdgeDelta:
         dst=jnp.asarray(np.concatenate([vdst, vsrc[nonloop], dst[d:]])),
         weight=jnp.asarray(np.concatenate([vw, vw[nonloop], w[d:]])),
         num_deltas=d + int(nonloop.sum()),
+        seq=delta.seq,
     )
 
 
@@ -186,7 +203,8 @@ def coalesce_edge_deltas(deltas: Sequence[EdgeDelta],
         np.add.at(wsum, inv, w)
         keep = wsum != 0.0
         src, dst, w = src[first[keep]], dst[first[keep]], wsum[keep]
-    out = edge_delta_from_numpy(src, dst, w.astype(np.float32))
+    seq = max((d.seq for d in deltas), default=-1)
+    out = edge_delta_from_numpy(src, dst, w.astype(np.float32), seq=seq)
     if pad_multiple:
         out = out.with_padding(pad_multiple)
     return out
@@ -203,7 +221,8 @@ def coalesce_label_deltas(deltas: Sequence[LabelDelta],
             final[int(nd)] = int(lb)
     nodes = np.fromiter(final.keys(), np.int32, len(final))
     labs = np.fromiter(final.values(), np.int32, len(final))
-    out = label_delta_from_numpy(nodes, labs)
+    seq = max((d.seq for d in deltas), default=-1)
+    out = label_delta_from_numpy(nodes, labs, seq=seq)
     if pad_multiple:
         out = out.with_padding(pad_multiple)
     return out

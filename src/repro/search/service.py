@@ -36,6 +36,15 @@ from repro.core.incremental import DirtyRowTracker
 from repro.search.index import ClassPartitionedIndex
 
 
+class LoadShedError(RuntimeError):
+    """A bounded queue refused new work (backpressure made visible).
+
+    Raised instead of silently growing the backlog past ``max_pending``;
+    every shed is counted in the owning service's / router's ``stats``, so
+    saturation shows up in monitoring rather than as unbounded latency.
+    """
+
+
 @dataclasses.dataclass
 class QueryTicket:
     """One pending similarity query batch (any number of query vectors)."""
@@ -63,13 +72,18 @@ class GEEQueryService:
 
     def __init__(self, index: ClassPartitionedIndex, inc=None,
                  flush_every: int = 64, pad_multiple: int = 64,
-                 nprobe: int | None = None, default_k: int = 10):
+                 nprobe: int | None = None, default_k: int = 10,
+                 max_pending: int | None = None):
         self.index = index
         self.inc = inc
         self.flush_every = int(flush_every)
         self.pad_multiple = max(int(pad_multiple), 1)
         self.nprobe = nprobe
         self.default_k = int(default_k)
+        # Queue bound: a submit that would push the backlog past this sheds
+        # (raises LoadShedError, counted) instead of queueing unboundedly.
+        # None = unbounded (the pre-replication behavior).
+        self.max_pending = None if max_pending is None else int(max_pending)
         self._queue: list[QueryTicket] = []
         self._pending = 0
         self._uid = 0
@@ -77,7 +91,7 @@ class GEEQueryService:
         self.stats = {"submitted": 0, "flushes": 0, "queries_scored": 0,
                       "pad_queries": 0, "repaired_rows": 0,
                       "bucket_moves": 0, "full_refreshes": 0,
-                      "flush_ms": []}
+                      "shed_queries": 0, "flush_ms": []}
         if inc is not None:
             if inc.n != index.num_points:
                 raise ValueError(
@@ -98,6 +112,12 @@ class GEEQueryService:
         """Rows whose index entry lags the incremental state (next flush
         repairs them)."""
         return self._tracker.pending if self._tracker is not None else 0
+
+    @property
+    def backlog(self) -> int:
+        """Queued-but-unanswered query vectors (the routing/shedding
+        signal)."""
+        return self._pending
 
     # -- ingest --------------------------------------------------------------
     def submit(self, queries, k: int | None = None) -> QueryTicket:
@@ -127,6 +147,12 @@ class GEEQueryService:
         return self._uid
 
     def _enqueue(self, ticket: QueryTicket, n_queries: int) -> QueryTicket:
+        if self.max_pending is not None \
+                and self._pending + n_queries > self.max_pending:
+            self.stats["shed_queries"] += n_queries
+            raise LoadShedError(
+                f"query backlog {self._pending} + {n_queries} would exceed "
+                f"max_pending={self.max_pending}; flush or route elsewhere")
         self._queue.append(ticket)
         self._pending += n_queries
         self.stats["submitted"] += n_queries
@@ -220,37 +246,85 @@ class GEEDeltaServer:
     Coalesced batches are padded to ``pad_multiple`` so a future jitted
     applier sees a small set of static delta shapes (same discipline as
     ``EdgeList`` padding).
+
+    Durability: pass ``log=`` (a ``repro.serve.snapshot.DeltaLog`` -- any
+    object with ``append(deltas, meta) -> stamped deltas`` works) and every
+    flush writes one atomic write-ahead record *before* applying, with the
+    flush's edge and label batches committing together; crash recovery
+    replays the log past the latest snapshot's watermark.  ``meta`` (a
+    small JSON-able dict attribute) rides along on each record -- stream
+    drivers use it to mark their position for exact resume.
+
+    Backpressure: ``max_backlog`` bounds the queued-but-unapplied deltas.
+    A submit that would exceed it forces a synchronous flush first (writes
+    are *never* shed -- unlike read replicas, there is exactly one write
+    path and dropping a delta would fork history); the forced flushes are
+    counted in ``stats["backpressure_flushes"]``.
     """
 
-    def __init__(self, inc, flush_every: int = 256, pad_multiple: int = 64):
+    def __init__(self, inc, flush_every: int = 256, pad_multiple: int = 64,
+                 log=None, max_backlog: int | None = None):
         self.inc = inc
         self.flush_every = int(flush_every)
         self.pad_multiple = int(pad_multiple)
+        self.log = log
+        self.max_backlog = None if max_backlog is None else int(max_backlog)
+        self.meta: Optional[dict] = None     # stamped onto WAL records
         self._edge_backlog: list = []
         self._label_backlog: list = []
         self._pending = 0
         self.stats = {"submitted": 0, "flushes": 0, "applied_deltas": 0,
                       "coalesced_away": 0, "rows_invalidated": 0,
-                      "reads": 0, "stale_reads": 0, "rejected_deltas": 0}
+                      "reads": 0, "stale_reads": 0, "rejected_deltas": 0,
+                      "logged_records": 0, "backpressure_flushes": 0}
 
     # -- ingest --------------------------------------------------------------
     def submit(self, delta) -> None:
         """Queue an ``EdgeDelta`` or ``LabelDelta``; may trigger a flush."""
         from repro.graph.delta import EdgeDelta, LabelDelta
 
+        if not isinstance(delta, (EdgeDelta, LabelDelta)):
+            raise TypeError(f"unsupported delta type {type(delta).__name__}")
+        if self.max_backlog is not None and self._pending \
+                and self._pending + delta.num_deltas > self.max_backlog:
+            self.stats["backpressure_flushes"] += 1
+            self.flush()
         if isinstance(delta, EdgeDelta):
             self._edge_backlog.append(delta)
-        elif isinstance(delta, LabelDelta):
-            self._label_backlog.append(delta)
         else:
-            raise TypeError(f"unsupported delta type {type(delta).__name__}")
+            self._label_backlog.append(delta)
         self._pending += delta.num_deltas
         self.stats["submitted"] += delta.num_deltas
         if self._pending >= self.flush_every:
             self.flush()
 
+    def _validate_backlog(self) -> None:
+        """Reject a poisoned backlog *before* it reaches the WAL: a bad
+        batch must neither mutate state nor be replayed at recovery."""
+        n, k = self.inc.n, self.inc.k
+        for d in self._edge_backlog:
+            m = d.num_deltas
+            u = np.asarray(d.src)[:m]
+            v = np.asarray(d.dst)[:m]
+            if m and (u.min() < 0 or v.min() < 0
+                      or u.max() >= n or v.max() >= n):
+                raise ValueError("edge delta references a node id outside "
+                                 "[0, num_nodes)")
+        for d in self._label_backlog:
+            m = d.num_deltas
+            nodes = np.asarray(d.node)[:m]
+            labs = np.asarray(d.new_label)[:m]
+            live = nodes >= 0
+            if np.any(nodes[live] >= n):
+                raise ValueError("label delta references a node id >= "
+                                 "num_nodes")
+            if np.any(labs[live] >= k):
+                raise ValueError(f"label delta assigns a label >= "
+                                 f"num_classes {k}")
+
     def flush(self) -> int:
-        """Coalesce and apply the backlog; returns deltas actually applied."""
+        """Coalesce, log (when a WAL is attached) and apply the backlog;
+        returns deltas actually applied."""
         from repro.graph.delta import (coalesce_edge_deltas,
                                        coalesce_label_deltas)
 
@@ -259,23 +333,30 @@ class GEEDeltaServer:
         applied = 0
         stale_before = self.inc.num_pending_rows
         try:
+            self._validate_backlog()
+            merged = []
             if self._edge_backlog:
-                merged = coalesce_edge_deltas(self._edge_backlog,
-                                              pad_multiple=self.pad_multiple)
-                self.inc.apply_edges(merged)
-                applied += merged.num_deltas
-                self._edge_backlog.clear()
+                merged.append(coalesce_edge_deltas(
+                    self._edge_backlog, pad_multiple=self.pad_multiple))
             if self._label_backlog:
-                merged = coalesce_label_deltas(self._label_backlog,
-                                               pad_multiple=self.pad_multiple)
-                self.inc.apply_labels(merged)
-                applied += merged.num_deltas
-                self._label_backlog.clear()
+                merged.append(coalesce_label_deltas(
+                    self._label_backlog, pad_multiple=self.pad_multiple))
+            if self.log is not None and merged:
+                # WAL discipline: one atomic record per flush, written
+                # before anything mutates.  A crash in between leaves a
+                # logged-but-unapplied record, which replay covers.
+                merged = self.log.append(merged, meta=self.meta)
+                self.stats["logged_records"] += 1
+            for d in merged:
+                self.inc.apply(d)
+                applied += d.num_deltas
+            self._edge_backlog.clear()
+            self._label_backlog.clear()
         except ValueError:
-            # Drop the poisoned backlog before re-raising.  The appliers are
-            # atomic (they validate before mutating), so the incremental
-            # state is still consistent; keeping the bad batch queued would
-            # wedge every later submit/flush/read on the same error.
+            # Drop the poisoned backlog before re-raising.  Validation runs
+            # before the WAL append and the appliers are atomic, so neither
+            # the log nor the incremental state carries the bad batch;
+            # keeping it queued would wedge every later submit/flush/read.
             rejected = (sum(d.num_deltas for d in self._edge_backlog)
                         + sum(d.num_deltas for d in self._label_backlog))
             self._edge_backlog.clear()

@@ -1,0 +1,392 @@
+"""Crash-safe serving: WAL semantics, snapshot/recover exactness, replica
+staleness + load shedding, and the SIGKILL kill-and-recover contract."""
+
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.gee import GEEOptions
+from repro.core.incremental import IncrementalGEE
+from repro.graph.delta import edge_delta_from_numpy, label_delta_from_numpy
+from repro.graph.sbm import sample_sbm
+from repro.search.index import ClassPartitionedIndex
+from repro.search.service import (GEEDeltaServer, GEEQueryService,
+                                  LoadShedError)
+from repro.serve.replica import GEEReplica, ReplicaRouter
+from repro.serve.snapshot import DeltaLog, GEESnapshotter, recover
+
+N = 200
+
+
+def _inc(opts=GEEOptions(), seed=0, n=N):
+    s = sample_sbm(n, seed=seed)
+    return IncrementalGEE.from_graph(s.edges, s.labels, s.num_classes,
+                                     opts), s
+
+
+def _edge_batch(rng, n=N, size=16):
+    return edge_delta_from_numpy(rng.integers(0, n, size),
+                                 rng.integers(0, n, size),
+                                 rng.random(size))
+
+
+def _label_batch(rng, k, n=N, size=4):
+    return label_delta_from_numpy(rng.integers(0, n, size),
+                                  rng.integers(0, k, size))
+
+
+# -- DeltaLog ----------------------------------------------------------------
+
+def test_delta_log_roundtrip_reopen_and_prune(tmp_path):
+    log = DeltaLog(str(tmp_path))
+    rng = np.random.default_rng(0)
+    b1 = log.append([_edge_batch(rng)], meta={"batch": 0})
+    b2 = log.append([_edge_batch(rng), _label_batch(rng, 3)],
+                    meta={"batch": 1})
+    assert [d.seq for d in b1] == [0]
+    assert [d.seq for d in b2] == [1, 2]
+    assert log.head_seq == 2
+
+    # a reopened log continues the sequence space
+    log2 = DeltaLog(str(tmp_path))
+    assert log2.head_seq == 2
+    (b3,) = log2.append([_edge_batch(rng)])
+    assert b3.seq == 3
+
+    replayed = list(log2.replay(after_seq=-1))
+    assert [seq for seq, _d, _m in replayed] == [0, 1, 2, 3]
+    assert replayed[1][2] == {"batch": 1}          # meta rides the record
+    # partial replay honors the watermark mid-record
+    assert [seq for seq, _d, _m in log2.replay(after_seq=1)] == [2, 3]
+
+    # prune only drops records *fully* covered by the watermark
+    log2.prune(upto_seq=1)                         # record (1,2) spans seq 2
+    assert [seq for seq, _d, _m in log2.replay(after_seq=-1)] == [1, 2, 3]
+    log2.prune(upto_seq=2)
+    assert [seq for seq, _d, _m in log2.replay(after_seq=-1)] == [3]
+
+
+def test_delta_log_record_preserves_payload(tmp_path):
+    log = DeltaLog(str(tmp_path))
+    src = np.array([3, 1, 4]); dst = np.array([1, 5, 9])
+    w = np.array([0.25, -1.0, 2.0])
+    log.append([edge_delta_from_numpy(src, dst, w)])
+    ((seq, d, _meta),) = tuple(log.replay())
+    assert seq == 0 and d.seq == 0
+    m = d.num_deltas
+    np.testing.assert_array_equal(np.asarray(d.src)[:m], src)
+    np.testing.assert_array_equal(np.asarray(d.dst)[:m], dst)
+    np.testing.assert_allclose(np.asarray(d.weight)[:m], w)
+
+
+def test_watermark_makes_replay_idempotent():
+    import dataclasses
+
+    inc, _s = _inc()
+    rng = np.random.default_rng(1)
+    stamped = [dataclasses.replace(d, seq=i)
+               for i, d in enumerate([_edge_batch(rng), _edge_batch(rng)])]
+    for d in stamped:
+        inc.apply(d)
+    assert inc.applied_seq == 1
+    ref = inc.embedding().copy()
+    for d in stamped:                      # at-least-once delivery
+        inc.apply(d)
+    assert inc.stats["skipped_replays"] == 2
+    np.testing.assert_array_equal(inc.embedding(), ref)
+    # unsequenced deltas (seq=-1) still apply normally
+    inc.apply(_edge_batch(rng))
+    assert inc.applied_seq == 1
+
+
+# -- snapshot -> recover exactness -------------------------------------------
+
+@pytest.mark.parametrize("opts", [
+    GEEOptions(),
+    GEEOptions(laplacian=True, diag_aug=True),
+    GEEOptions(laplacian=True, diag_aug=True, correlation=True),
+], ids=lambda o: o.tag())
+def test_snapshot_recover_exact(tmp_path, opts):
+    inc, s = _inc(opts)
+    index = ClassPartitionedIndex.build(inc.embedding(), s.labels,
+                                        s.num_classes)
+    service = GEEQueryService(index, inc, flush_every=10**9)
+    snap = GEESnapshotter(str(tmp_path), every=10**9)
+    server = GEEDeltaServer(inc, flush_every=10**9, log=snap.log)
+    rng = np.random.default_rng(2)
+
+    for b in range(3):                     # folded into the snapshot
+        server.meta = {"batch": b}
+        server.submit(_edge_batch(rng))
+        server.submit(_label_batch(rng, s.num_classes))
+        server.flush()
+    snap.snapshot(inc, index, service=service, delta_server=server)
+    for b in range(3, 5):                  # WAL-only (replayed at recovery)
+        server.meta = {"batch": b}
+        server.submit(_edge_batch(rng))
+        server.flush()
+    snap.close()
+
+    st = recover(str(tmp_path))
+    assert st.replayed_deltas == 2
+    assert st.last_meta == {"batch": 4}
+    assert st.inc.applied_seq == inc.applied_seq
+    np.testing.assert_array_equal(st.inc.S, inc.S)
+    np.testing.assert_array_equal(st.inc.labels, inc.labels)
+    np.testing.assert_array_equal(st.inc.deg, inc.deg)
+    np.testing.assert_array_equal(st.inc.embedding(), inc.embedding())
+    assert st.inc.out_nbrs == inc.out_nbrs
+    assert st.inc.in_nbrs == inc.in_nbrs
+
+    # the recovered index serves: full probe == brute force on recovered Z
+    z = st.inc.embedding()
+    q = z[:8]
+    ids_f, sc_f = (np.asarray(a) for a in
+                   st.index.search(q, 5, nprobe=st.index.num_cells))
+    ids_b, sc_b = (np.asarray(a) for a in
+                   st.index.search(q, 5, brute_force=True))
+    np.testing.assert_allclose(np.sort(sc_f, axis=1),
+                               np.sort(sc_b, axis=1), rtol=1e-5, atol=1e-5)
+    service.close()
+
+
+def test_recover_falls_back_past_corrupt_snapshot(tmp_path):
+    import json
+
+    inc, s = _inc()
+    snap = GEESnapshotter(str(tmp_path), every=10**9, keep_last=3)
+    server = GEEDeltaServer(inc, flush_every=10**9, log=snap.log)
+    rng = np.random.default_rng(3)
+    server.submit(_edge_batch(rng)); server.flush()
+    snap.snapshot(inc, delta_server=server)        # good snapshot
+    server.submit(_edge_batch(rng)); server.flush()
+    step2 = snap.snapshot(inc, delta_server=server)  # will be corrupted
+    snap.close()
+
+    step_dir = os.path.join(str(tmp_path), "snapshots",
+                            f"step_{step2:010d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        entry = sorted(json.load(f)["index"].items())[0][1]
+    path = os.path.join(step_dir, entry["file"])
+    np.save(path, np.full_like(np.load(path), 7.0))
+
+    st = recover(str(tmp_path))
+    assert st.snapshot_step < step2                # fell back
+    assert st.replayed_deltas >= 1                 # longer WAL replay
+    np.testing.assert_array_equal(st.inc.embedding(), inc.embedding())
+
+
+def test_recover_without_snapshot_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        recover(str(tmp_path / "empty"))
+
+
+def test_wal_prune_respects_retained_snapshots(tmp_path):
+    """Every snapshot the manager keeps must stay replayable: the WAL is
+    pruned to the *oldest retained* snapshot, not the newest."""
+    inc, _s = _inc()
+    snap = GEESnapshotter(str(tmp_path), every=10**9, keep_last=2)
+    server = GEEDeltaServer(inc, flush_every=10**9, log=snap.log)
+    rng = np.random.default_rng(4)
+    steps = []
+    for _ in range(3):
+        server.submit(_edge_batch(rng)); server.flush()
+        steps.append(snap.snapshot(inc, delta_server=server))
+    snap.close()
+    from repro.checkpoint import ckpt
+    kept = ckpt.available_steps(os.path.join(str(tmp_path), "snapshots"))
+    assert kept == steps[-2:]
+    log = DeltaLog(os.path.join(str(tmp_path), "wal"))
+    replayable = [seq for seq, _d, _m in log.replay(after_seq=-1)]
+    # oldest kept snapshot has watermark steps[-2]-1; everything after it
+    # must still be in the WAL
+    assert replayable and min(replayable) <= kept[0]
+
+
+# -- write-path WAL discipline ----------------------------------------------
+
+def test_poisoned_batch_rejected_before_wal(tmp_path):
+    inc, s = _inc()
+    log = DeltaLog(str(tmp_path))
+    server = GEEDeltaServer(inc, flush_every=10**9, log=log)
+    server.submit(edge_delta_from_numpy([0, inc.n + 7], [1, 2], [1.0, 1.0]))
+    with pytest.raises(ValueError):
+        server.flush()
+    assert log.head_seq == -1                      # nothing logged
+    assert server.stats["rejected_deltas"] == 2
+    # the server keeps working, and good batches do log
+    server.submit(_edge_batch(np.random.default_rng(5)))
+    server.flush()
+    assert log.head_seq == 0
+    # bad labels are rejected too
+    server.submit(label_delta_from_numpy([1], [s.num_classes + 3]))
+    with pytest.raises(ValueError):
+        server.flush()
+    assert log.head_seq == 0
+
+
+def test_delta_server_backpressure_flush(tmp_path):
+    inc, _s = _inc()
+    server = GEEDeltaServer(inc, flush_every=10**9, max_backlog=20,
+                            log=DeltaLog(str(tmp_path)))
+    rng = np.random.default_rng(6)
+    for _ in range(5):
+        server.submit(_edge_batch(rng, size=16))   # 16 > 20-16 -> flush
+    assert server.stats["backpressure_flushes"] >= 3
+    assert server.stats["submitted"] == 80
+    server.flush()
+    # writes are never shed: every submitted delta was applied or coalesced
+    assert (server.stats["applied_deltas"]
+            + server.stats["coalesced_away"]) == 80
+
+
+# -- read path: shedding + replicas -----------------------------------------
+
+def test_query_service_sheds_past_max_pending():
+    inc, s = _inc()
+    index = ClassPartitionedIndex.build(inc.embedding(), s.labels,
+                                        s.num_classes)
+    svc = GEEQueryService(index, inc, flush_every=10**9, max_pending=8)
+    svc.submit_rows(np.arange(8))
+    with pytest.raises(LoadShedError):
+        svc.submit_rows(np.arange(4))
+    assert svc.stats["shed_queries"] == 4
+    svc.flush()                                    # drain -> admits again
+    t = svc.submit_rows(np.arange(4))
+    svc.flush()
+    assert t.done and t.ids.shape == (4, svc.default_k)
+    svc.close()
+
+
+def _snapshot_dir_with_index(tmp_path, seed=0):
+    inc, s = _inc(seed=seed)
+    index = ClassPartitionedIndex.build(inc.embedding(), s.labels,
+                                        s.num_classes)
+    service = GEEQueryService(index, inc, flush_every=10**9)
+    snap = GEESnapshotter(str(tmp_path), every=10**9)
+    snap.snapshot(inc, index, service=service)
+    snap.close()
+    service.close()
+    return inc
+
+
+def test_replica_staleness_bound_and_catch_up(tmp_path):
+    ref = _snapshot_dir_with_index(tmp_path)
+    r1 = GEEReplica.from_directory(str(tmp_path), name="r1",
+                                   flush_every=10**9)
+    r2 = GEEReplica.from_directory(str(tmp_path), name="r2",
+                                   flush_every=10**9)
+    assert r1.watermark == ref.applied_seq
+    router = ReplicaRouter([r1, r2], max_lag=0)
+
+    rng = np.random.default_rng(7)
+    router.publish([_edge_batch(rng), _edge_batch(rng)])
+    assert router.head_seq == 1
+    assert r1.watermark < router.head_seq          # lazily stale
+
+    # a lag-tolerant read serves without catching anyone up
+    router.read_rows([0, 1], k=3, max_lag=10)
+    assert max(r1.watermark, r2.watermark) < router.head_seq
+
+    # a strict read catches the serving replica up first
+    ids, _sc = router.read_rows([0, 1], k=3, max_lag=0)
+    assert ids.shape == (2, 3)
+    assert max(r1.watermark, r2.watermark) == router.head_seq
+    assert router.stats["catch_up_deltas"] == 2
+
+    # retained deltas are dropped once every replica passed them
+    router.catch_up(r1), router.catch_up(r2)
+    assert router._retained == []
+    router.close()
+
+
+def test_router_sheds_only_when_every_replica_full(tmp_path):
+    _snapshot_dir_with_index(tmp_path)
+    reps = [GEEReplica.from_directory(str(tmp_path), name=f"r{i}",
+                                      flush_every=10**9, max_pending=6)
+            for i in range(2)]
+    router = ReplicaRouter(reps, max_lag=0)
+    served = shed = 0
+    for _ in range(5):                             # 5*3 = 15 > 2*6 slots
+        try:
+            router.submit_rows([0, 1, 2])
+            served += 1
+        except LoadShedError:
+            shed += 1
+    assert served == 4 and shed == 1               # both queues filled first
+    assert router.stats["shed_reads"] == shed
+    assert sum(router.stats["routed"].values()) == served
+    router.flush_all()
+    router.close()
+
+
+# -- the integration contract: SIGKILL mid-stream, recover, compare ----------
+
+STREAM_ARGS = ["--sbm", "300", "--stream-frac", "0.5", "--batch", "16",
+               "--verify-every", "0", "--snapshot-every", "2",
+               "--seed", "3", "--lap", "--diag"]
+
+
+def _spawn_stream(snapshot_dir, extra=()):
+    env = {**os.environ, "JAX_PLATFORMS": "cpu"}
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..",
+                                      "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.gee_stream", *STREAM_ARGS,
+         "--snapshot-dir", str(snapshot_dir), *extra],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True)
+
+
+def test_sigkill_recover_matches_uninterrupted(tmp_path):
+    """The acceptance gate: SIGKILL the streaming driver mid-delta-stream,
+    recover + resume, and the final embedding and neighbor results must be
+    within 1e-5 of an uninterrupted run."""
+    from repro.launch.gee_search import recall_at_k
+
+    ref_dir, kill_dir = tmp_path / "ref", tmp_path / "kill"
+    ref_proc = _spawn_stream(ref_dir)
+
+    child = _spawn_stream(kill_dir)
+    snap_sub = kill_dir / "snapshots"
+    deadline = time.time() + 240
+    killed = False
+    while time.time() < deadline and child.poll() is None:
+        if snap_sub.is_dir() and \
+                len([s for s in os.listdir(snap_sub)
+                     if s.startswith("step_")]) >= 2:
+            child.send_signal(signal.SIGKILL)
+            child.wait()
+            killed = True
+            break
+        time.sleep(0.05)
+    assert killed, "stream finished before the kill point"
+
+    resumed = _spawn_stream(kill_dir, extra=["--recover"])
+    out, _ = resumed.communicate(timeout=240)
+    assert resumed.returncode == 0, out
+    assert "recovered snapshot step" in out
+    out_ref, _ = ref_proc.communicate(timeout=240)
+    assert ref_proc.returncode == 0, out_ref
+
+    ref = recover(str(ref_dir))
+    rec = recover(str(kill_dir))
+    assert rec.inc.applied_seq == ref.inc.applied_seq
+    z_ref, z_rec = ref.inc.embedding(), rec.inc.embedding()
+    err = float(np.abs(z_ref.astype(np.float64)
+                       - z_rec.astype(np.float64)).max())
+    assert err <= 1e-5, f"recovered Z deviates {err:.2e}"
+
+    rows = np.arange(0, 300, 7)
+    ids_b, sc_b = (np.asarray(a) for a in
+                   ref.index.search(z_ref[rows], 10, brute_force=True))
+    ids_r, sc_r = (np.asarray(a) for a in
+                   rec.index.search(z_rec[rows], 10,
+                                    nprobe=rec.index.num_cells))
+    assert recall_at_k(ids_r, sc_r, ids_b, sc_b) == 1.0
