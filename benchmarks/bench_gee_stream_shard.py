@@ -1,0 +1,238 @@
+"""streamed_sharded GEE: edges/s scaling over shards, bounded peak RSS.
+
+The streamed_sharded backend's claim is two-fold: (1) near-linear
+throughput scaling when windows split across P devices, and (2) peak
+host memory O(window + N*K) however large E grows -- the .geeb fixture
+streams via mmap, never materialized.
+
+Measurement mirrors bench_gee_chunked: every (size, shards) cell runs in
+its own child interpreter so ``ru_maxrss`` is a per-cell high-water mark;
+each child forces ``P`` fake XLA CPU devices via
+``--xla_force_host_platform_device_count``, so the scaling gate below is
+only meaningful on hosts with >= 2 physical cores (fake devices
+timeslice one core otherwise -- the gate auto-skips there, and CI's
+smoke run passes ``--min-scaling 0``).  The smallest cell's embedding is
+diffed against an in-memory ``gee_sparse_jax`` reference child
+(<= 1e-5 asserted).  Emits BENCH_stream_shard.json.
+
+  PYTHONPATH=src python benchmarks/bench_gee_stream_shard.py \
+      [--nodes 20000,200000] [--deg 10] [--shards 1,2,4] \
+      [--chunk-edges 262144] [--min-scaling 1.6]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+REPO_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "..", "src")
+sys.path.insert(0, REPO_SRC)
+
+NODES = (20_000, 200_000)
+SHARDS = (1, 2, 4)
+OPTS_FLAGS = ("--lap", "--diag", "--cor")
+
+
+def _child(args) -> None:
+    """One measured cell: stream `--file` across `--shards` devices (or
+    embed in-memory for the reference), print a JSON line."""
+    import jax
+
+    from repro.core.fold import gee_streamed_sharded
+    from repro.core.gee import GEEOptions, gee_sparse_jax
+    from repro.graph.datasets import load_file
+    from repro.graph.io import load_labels, open_window_parallel
+
+    opts = GEEOptions(laplacian=args.lap, diag_aug=args.diag,
+                      correlation=args.cor)
+    if args.mode == "streamed":
+        assert jax.device_count() == args.shards, \
+            f"expected {args.shards} devices, got {jax.device_count()}"
+        t0 = time.perf_counter()
+        ws = open_window_parallel(args.file, args.shards,
+                                  chunk_edges=args.chunk_edges)
+        labels = load_labels(args.file)
+        k = int(labels.max()) + 1
+        fn = lambda: gee_streamed_sharded(ws, labels, k, opts)
+        z = jax.block_until_ready(fn())
+        t_first = time.perf_counter() - t0      # open + trace + stream
+        ts = []
+        for _ in range(args.repeats):           # warm: window reads included
+            t0 = time.perf_counter()
+            z = jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        t_embed = min(ts)
+    else:                                        # in-memory reference
+        ds = load_file(args.file)
+        labels = load_labels(args.file)
+        k = int(labels.max()) + 1
+        fn = lambda: gee_sparse_jax(ds.edges, labels, k, opts)
+        z = jax.block_until_ready(fn())
+        t_first = t_embed = 0.0                  # not a measured cell
+    if args.z_out:
+        np.save(args.z_out, np.asarray(z))
+    print(json.dumps({
+        "mode": args.mode, "shards": args.shards,
+        "rss_kb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss,
+        "t_first": t_first, "t_embed": t_embed,
+    }), flush=True)
+
+
+def _run_child(mode, file, shards, chunk_edges, z_out, opt_flags,
+               repeats=3):
+    cmd = [sys.executable, os.path.abspath(__file__), "--child",
+           "--mode", mode, "--file", file, "--shards", str(shards),
+           "--chunk-edges", str(chunk_edges),
+           "--repeats", str(repeats), *opt_flags]
+    if z_out:
+        cmd += ["--z-out", z_out]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if mode == "streamed":
+        kept = " ".join(
+            tok for tok in env.get("XLA_FLAGS", "").split()
+            if not tok.startswith("--xla_force_host_platform_device_count"))
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={shards} " + kept)
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(f"child {mode} x{shards} failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("{")][-1]
+    return json.loads(line)
+
+
+def run(nodes=NODES, shards=SHARDS, deg=10, classes=5, chunk_edges=1 << 18,
+        seed=0, workdir=None, opt_flags=OPTS_FLAGS, repeats=3):
+    from repro.graph.datasets import DatasetSpec, synth_to_disk
+
+    workdir = workdir or tempfile.mkdtemp(prefix="bench_stream_shard_")
+    rows = []
+    for n in nodes:
+        e = n * deg // 2
+        spec = DatasetSpec(f"synth-{n}", n, e, classes)
+        path = os.path.join(workdir, f"synth_{n}.geeb")
+        synth_to_disk(spec, path, seed=seed, chunk_edges=chunk_edges)
+        per_shard = {}
+        for p in shards:
+            z_out = (os.path.join(workdir, f"z_{n}_x{p}.npy")
+                     if (n == min(nodes) and p == min(shards)) else None)
+            per_shard[p] = _run_child("streamed", path, p, chunk_edges,
+                                      z_out, opt_flags, repeats)
+            per_shard[p]["z_out"] = z_out
+        row = {
+            "nodes": n, "edges_undirected": e, "chunk_edges": chunk_edges,
+            "shards": {str(p): {"t_embed": per_shard[p]["t_embed"],
+                                "t_cold": per_shard[p]["t_first"],
+                                "rss_kb": per_shard[p]["rss_kb"],
+                                "eps": e / per_shard[p]["t_embed"]}
+                       for p in shards},
+        }
+        rows.append(row)
+        cells = "  ".join(
+            f"x{p}={per_shard[p]['t_embed']*1e3:8.1f}ms "
+            f"({e / per_shard[p]['t_embed'] / 1e6:5.2f}M e/s, "
+            f"{per_shard[p]['rss_kb']/1024:6.1f}MB)" for p in shards)
+        print(f"N={n:8d} E={e:10d}  {cells}")
+
+    # numerics: smallest cell vs the in-memory reference
+    n0, p0 = min(nodes), min(shards)
+    ref_out = os.path.join(workdir, f"z_{n0}_ref.npy")
+    _run_child("ref", os.path.join(workdir, f"synth_{n0}.geeb"), 1,
+               chunk_edges, ref_out, opt_flags, repeats=1)
+    z_stream = np.load(os.path.join(workdir, f"z_{n0}_x{p0}.npy"))
+    err = float(np.abs(z_stream - np.load(ref_out)).max())
+    assert err <= 1e-5, f"streamed_sharded diverged from reference: {err}"
+
+    p_lo, p_hi = min(shards), max(shards)
+    big = rows[-1]["shards"]
+    scaling_2x = (big[str(p_lo)]["t_embed"] / big[str(2)]["t_embed"]
+                  if 2 in shards and p_lo == 1 else None)
+    eps_max_shards = big[str(p_hi)]["eps"]
+    rss_growth = (max(r["shards"][str(p_hi)]["rss_kb"] for r in rows)
+                  / min(r["shards"][str(p_hi)]["rss_kb"] for r in rows))
+    e_span = (max(r["edges_undirected"] for r in rows)
+              / min(r["edges_undirected"] for r in rows))
+    print(f"edge span {e_span:.1f}x: peak-RSS growth at x{p_hi} "
+          f"{rss_growth:.2f}x, {eps_max_shards/1e6:.2f} M edges/s at "
+          f"x{p_hi}" + (f", 2-shard speedup {scaling_2x:.2f}x"
+                        if scaling_2x else "") + f", max err {err:.1e}")
+    return rows, {"edge_span": e_span, "rss_growth": rss_growth,
+                  "eps_max_shards": eps_max_shards,
+                  "scaling_2x": scaling_2x, "max_shards": p_hi,
+                  "max_abs_err": err}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", action="store_true",
+                    help=argparse.SUPPRESS)   # internal re-exec mode
+    ap.add_argument("--mode", choices=("streamed", "ref"), default=None)
+    ap.add_argument("--file", default=None)
+    ap.add_argument("--z-out", default=None)
+    ap.add_argument("--lap", action="store_true", default=None)
+    ap.add_argument("--diag", action="store_true", default=None)
+    ap.add_argument("--cor", action="store_true", default=None)
+    ap.add_argument("--nodes", type=str, default=",".join(map(str, NODES)))
+    ap.add_argument("--shards", type=str,
+                    default=",".join(map(str, SHARDS)))
+    ap.add_argument("--deg", type=int, default=10)
+    ap.add_argument("--classes", type=int, default=5)
+    ap.add_argument("--chunk-edges", type=int, default=1 << 18)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="warm repeats per cell (min is reported)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workdir", type=str, default=None,
+                    help="fixture directory (default: fresh tempdir)")
+    ap.add_argument("--json", type=str, default="BENCH_stream_shard.json",
+                    help="output JSON path ('' disables)")
+    ap.add_argument("--min-scaling", type=float, default=1.6,
+                    help="fail if the 1->2 shard speedup at the largest "
+                         "size falls below this (0 disables; auto-skipped "
+                         "on single-core hosts where fake devices "
+                         "timeslice one core)")
+    args = ap.parse_args(argv)
+    if args.child:
+        args.shards = int(args.shards)
+        return _child(args)
+
+    nodes = tuple(int(x) for x in args.nodes.split(",") if x)
+    shards = tuple(int(x) for x in args.shards.split(",") if x)
+    opt_flags = [f for f, on in (("--lap", args.lap), ("--diag", args.diag),
+                                 ("--cor", args.cor)) if on]
+    if not opt_flags:
+        opt_flags = list(OPTS_FLAGS)
+    rows, summary = run(nodes, shards, args.deg, args.classes,
+                        args.chunk_edges, args.seed, args.workdir,
+                        opt_flags, args.repeats)
+    cores = os.cpu_count() or 1
+    summary["host_cores"] = cores
+    if args.json:
+        payload = {"benchmark": "gee_stream_shard", "opts": opt_flags,
+                   **summary, "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+    if args.min_scaling and summary["scaling_2x"] is not None:
+        if cores < 2:
+            print(f"--min-scaling skipped: {cores} core(s) -- fake devices "
+                  f"timeslice one core, scaling is unmeasurable here")
+        elif summary["scaling_2x"] < args.min_scaling:
+            raise SystemExit(
+                f"2-shard speedup {summary['scaling_2x']:.2f}x is below "
+                f"--min-scaling {args.min_scaling}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -26,10 +26,14 @@ class GEEEmbedder:
     """Fit/transform-style wrapper around sparse GEE.
 
     backend: 'sparse_jax' (default), 'pallas', 'auto', 'chunked',
-             'dense_jax', 'scipy', 'python_loop', or 'distributed'
-             (see ``docs/backends.md`` for the decision guide).
-    local_backend: per-shard compute used by 'distributed' --
-             'segment_sum' (default) or 'pallas' (ELL kernel per shard).
+             'streamed_sharded', 'dense_jax', 'scipy', 'python_loop', or
+             'distributed' (see ``docs/backends.md`` for the decision
+             guide).  'streamed_sharded' streams windows across all
+             devices (default mesh when ``mesh`` is None) and works for
+             both in-memory and file-backed fits.
+    local_backend: per-shard compute used by 'distributed' and
+             'streamed_sharded' -- 'segment_sum' (default) or 'pallas'
+             (ELL kernel per shard).
 
     In-memory graphs go through ``fit``/``fit_transform``; graphs on disk
     (any ``repro.graph.io`` format) go through ``fit_file`` /
@@ -301,6 +305,17 @@ class GEEEmbedder:
     # -- internals -----------------------------------------------------------
     def _compute(self) -> jax.Array:
         labels = self._labels
+        if self.backend == "streamed_sharded":
+            from repro.core.fold import gee_streamed_sharded
+            from repro.graph.io import DEFAULT_CHUNK_EDGES
+
+            source = (self._chunked if self._chunked is not None
+                      else self._prepared.chunked(
+                          self.chunk_edges or DEFAULT_CHUNK_EDGES))
+            return gee_streamed_sharded(source, labels, self.num_classes,
+                                        self.options, mesh=self.mesh,
+                                        axes=self.mesh_axes,
+                                        local_backend=self.local_backend)
         if self._chunked is not None:
             from repro.core.chunked import gee_chunked
 

@@ -17,8 +17,12 @@ from disk in fixed windows and fold each window into the accumulators.
            the correlation row-normalization are O(N*K), applied once.
 
 Peak memory is O(chunk_edges + N*K) however large E grows; every chunk
-has identical array shapes (the tail is weight-0 padded), so the three
-jitted folds trace exactly once per (chunk size, N, K) configuration.
+has identical array shapes (the tail is weight-0 padded), so the jitted
+folds trace exactly once per (chunk size, N, K) configuration.
+
+The fold itself lives in :mod:`repro.core.fold` -- this module is the
+single-device configuration of the shared accumulator (the multi-device
+streaming configuration is ``repro.core.fold.gee_streamed_sharded``).
 
 Undirected sources (one stored entry per edge {i, j}) are folded in both
 directions per chunk -- self loops counted once -- so the result matches
@@ -42,54 +46,20 @@ True
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
-from repro.core.epilogue import finalize, inv_sqrt_degrees
-from repro.core.gee import GEEOptions, class_weight_inv
+from repro.core.epilogue import finalize
+from repro.core.fold import (both_directions, fold_degrees, fold_z,
+                             stream_fold)
+from repro.core.gee import GEEOptions
 from repro.graph.io import (ChunkedEdgeList, DEFAULT_CHUNK_EDGES,
                             load_labels, open_edge_list)
 
-
-def _both_directions(src, dst, weight):
-    """Expand one-entry-per-undirected-edge arrays to both directions in
-    one concatenation (self loops stored once keep a single copy: the
-    reversed duplicate gets weight 0, an exact no-op)."""
-    w_rev = jnp.where(src == dst, 0.0, weight)
-    return (jnp.concatenate([src, dst]), jnp.concatenate([dst, src]),
-            jnp.concatenate([weight, w_rev]))
-
-
-@partial(jax.jit, static_argnames=("undirected",))
-def _fold_degrees(deg, src, dst, weight, *, undirected: bool):
-    """deg += chunk's weighted out-degrees (both directions if undirected;
-    padding edges have weight 0 and are exact no-ops)."""
-    if undirected:
-        src, dst, weight = _both_directions(src, dst, weight)
-    return deg + jax.ops.segment_sum(weight, src,
-                                     num_segments=deg.shape[0])
-
-
-@partial(jax.jit, static_argnames=("num_classes", "undirected"))
-def _fold_z(z_flat, src, dst, weight, labels, winv, dinv, *,
-            num_classes: int, undirected: bool):
-    """z += chunk's per-class sums, exactly ``gee_sparse_jax``'s scatter.
-
-    ``dinv`` is all-ones when Laplacian normalization is off (``w * 1.0``
-    is exact in float32, so the no-Laplacian path stays bit-faithful).
-    """
-    if undirected:
-        src, dst, weight = _both_directions(src, dst, weight)
-    yd = labels[dst]
-    valid = yd >= 0
-    yd_safe = jnp.where(valid, yd, 0)
-    w_hat = weight * dinv[src] * dinv[dst]
-    contrib = jnp.where(valid, w_hat * winv[yd_safe], 0.0)
-    flat_idx = src * num_classes + yd_safe
-    return z_flat + jax.ops.segment_sum(contrib, flat_idx,
-                                        num_segments=z_flat.shape[0])
+# Deprecated aliases: the fold primitives moved to repro.core.fold.
+_both_directions = both_directions
+_fold_degrees = fold_degrees
+_fold_z = fold_z
 
 
 def gee_chunked(chunked: ChunkedEdgeList, labels, num_classes: int,
@@ -97,39 +67,21 @@ def gee_chunked(chunked: ChunkedEdgeList, labels, num_classes: int,
                 impl: str = "jnp") -> jax.Array:
     """Chunk-streamed GEE over any :class:`ChunkedEdgeList` source.
 
+    The single-device instance of the shared
+    :func:`repro.core.fold.stream_fold` accumulator, followed by the one
+    O(N*K) epilogue (``repro.core.epilogue.finalize``: diag-aug self
+    loops + correlation), applied once after streaming.
+
     Numerically the ``gee_sparse_jax`` contract (<= 1e-5 max-abs under
     every option setting); host memory stays O(chunk_edges + N*K).
     ``impl`` selects the epilogue row-norm implementation
     (``repro.core.epilogue.row_l2_normalize``; ``"auto"`` picks the
     Pallas kernel on TPU).
     """
-    n, k = chunked.num_nodes, int(num_classes)
-    labels = jnp.asarray(labels, jnp.int32)
-    if labels.shape[0] != n:
-        raise ValueError(f"labels cover {labels.shape[0]} nodes, "
-                         f"graph has {n}")
-    winv = class_weight_inv(labels, k)
-    und = chunked.undirected
-
-    if opts.laplacian:
-        deg = jnp.zeros((n,), jnp.float32)
-        for ch in chunked.chunks():                          # pass 1
-            deg = _fold_degrees(deg, ch.src, ch.dst, ch.weight,
-                                undirected=und)
-        if opts.diag_aug:
-            deg = deg + 1.0
-        dinv = inv_sqrt_degrees(deg)
-    else:
-        dinv = jnp.ones((n,), jnp.float32)
-
-    z = jnp.zeros((n * k,), jnp.float32)
-    for ch in chunked.chunks():                              # pass 2
-        z = _fold_z(z, ch.src, ch.dst, ch.weight, labels, winv, dinv,
-                    num_classes=k, undirected=und)
-    # The O(N*K) epilogue (diag-aug self loops + correlation) is the shared
-    # repro.core.epilogue implementation -- applied once, after streaming.
-    return finalize(z, labels, winv, dinv, num_classes=k, opts=opts,
-                    impl=impl)
+    k = int(num_classes)
+    z, winv, dinv = stream_fold(chunked, labels, k, opts)
+    return finalize(z, jnp.asarray(labels, jnp.int32), winv, dinv,
+                    num_classes=k, opts=opts, impl=impl)
 
 
 def gee_chunked_from_file(path: str, labels=None, num_classes: int | None = None,

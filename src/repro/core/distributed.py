@@ -32,65 +32,45 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.distributed.compat import shard_map, shard_map_nocheck
 
-from repro.core.epilogue import inv_sqrt_degrees, row_l2_normalize_jnp
+from repro.core.epilogue import inv_sqrt_degrees
+from repro.core.fold import (axis_size as _axis_size, combine_partials,
+                             pad_nodes, scatter_partial)
 from repro.core.gee import GEEOptions, class_weight_inv
-from repro.graph.containers import EdgeList, add_self_loops
+from repro.graph.containers import EdgeList
 from repro.graph.partition import shard_edges, shard_edges_to_ell
 
 
-def _axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
-    size = 1
-    for a in axes:
-        size *= mesh.shape[a]
-    return size
-
-
-def pad_nodes(n: int, p: int) -> int:
-    """Smallest multiple of p >= n (row padding for the reduce-scatter)."""
-    return ((n + p - 1) // p) * p
-
-
-def _local_gee_partial(src, dst, weight, labels, winv, num_nodes_pad: int,
-                       num_classes: int, laplacian: bool,
-                       axes: tuple[str, ...]):
-    """Per-device body: partial segment-sum GEE over the local edge shard."""
-    if laplacian:
-        # Degrees need global knowledge: partial degree then all-reduce.
-        deg_part = jax.ops.segment_sum(weight, src, num_segments=num_nodes_pad)
-        deg = jax.lax.psum(deg_part, axes)
-        dinv = inv_sqrt_degrees(deg)
-        weight = weight * dinv[src] * dinv[dst]
-
-    yd = labels[dst]
-    valid = yd >= 0
-    yd_safe = jnp.where(valid, yd, 0)
-    contrib = jnp.where(valid, weight * winv[yd_safe], 0.0)
-    flat = src * num_classes + yd_safe
-    z = jax.ops.segment_sum(contrib, flat,
-                            num_segments=num_nodes_pad * num_classes)
-    return z.reshape(num_nodes_pad, num_classes)
+def _local_degrees(weight, src, num_nodes_pad: int, diag_aug: bool,
+                   axes: tuple[str, ...]):
+    """Global degrees inside the body: partial degree then all-reduce,
+    plus the diag-aug +1 (self loops are never appended as edges -- the
+    shared epilogue folds the diagonal term instead)."""
+    deg = jax.lax.psum(
+        jax.ops.segment_sum(weight, src, num_segments=num_nodes_pad), axes)
+    if diag_aug:
+        deg = deg + 1.0
+    return inv_sqrt_degrees(deg)
 
 
 @partial(jax.jit, static_argnames=("num_classes", "opts", "mesh", "axes"))
 def _gee_distributed_jit(src, dst, weight, labels, num_classes: int,
                          opts: GEEOptions, mesh: Mesh,
                          axes: tuple[str, ...]):
-    p = _axis_size(mesh, axes)
-    n_pad = src_n_pad = labels.shape[0]          # labels pre-padded to mult of p
+    n_pad = labels.shape[0]              # labels pre-padded to mult of p
     winv = class_weight_inv(labels, num_classes)
 
     def body(src_l, dst_l, w_l, labels_l, winv_l):
-        z_part = _local_gee_partial(
-            src_l, dst_l, w_l, labels_l, winv_l, n_pad, num_classes,
-            opts.laplacian, axes)
-        # reduce-scatter rows: [N_pad, K] -> [N_pad/P, K], summed over shards
-        z_rows = jax.lax.psum_scatter(z_part, axes, scatter_dimension=0,
-                                      tiled=True)
-        if opts.correlation:
-            # Row-sharded rows normalize independently: the shared jnp
-            # epilogue form is safe inside the shard_map body.
-            z_rows = row_l2_normalize_jnp(z_rows)
-        return z_rows
+        if opts.laplacian:
+            dinv = _local_degrees(w_l, src_l, n_pad, opts.diag_aug, axes)
+        else:
+            dinv = jnp.ones((n_pad,), jnp.float32)
+        # The shared fold scatter: one in-memory window per device.
+        z_part = scatter_partial(src_l, dst_l, w_l, labels_l, winv_l, dinv,
+                                 n_pad, num_classes
+                                 ).reshape(n_pad, num_classes)
+        # reduce-scatter rows + row-local epilogue: the shared combine.
+        return combine_partials(z_part, labels_l, winv_l, dinv,
+                                mesh=mesh, axes=axes, opts=opts)
 
     spec_e = P(axes)                  # edge arrays sharded on dim 0
     spec_r = P()                      # labels / winv replicated
@@ -108,28 +88,29 @@ def _gee_distributed_pallas_jit(cols, vals, labels, num_classes: int,
                                 axes: tuple[str, ...], interpret: bool):
     """Per-shard Pallas kernel: each device contracts its local ELL plane
     (cols/vals rows = all N_pad nodes, columns = the device's edge subset)
-    and the reduce-scatter sums the partials -- identical collective pattern
-    to the segment-sum body."""
+    and the shared combine reduce-scatters the partials -- identical
+    collective pattern to the segment-sum body."""
     from repro.graph.ell import ell_planes
     from repro.kernels.gee_spmm import gee_spmm
 
+    n_pad = labels.shape[0]
     winv = class_weight_inv(labels, num_classes)
 
     def body(cols_l, vals_l, labels_l, winv_l):
         if opts.laplacian:
             deg = jax.lax.psum(jnp.sum(vals_l, axis=1), axes)
+            if opts.diag_aug:
+                deg = deg + 1.0
             dinv = inv_sqrt_degrees(deg)
             vals_scaled = vals_l * dinv[:, None] * dinv[cols_l]
         else:
+            dinv = jnp.ones((n_pad,), jnp.float32)
             vals_scaled = vals_l
         ylab, contrib = ell_planes(cols_l, vals_scaled, labels_l, winv_l)
         z_part = gee_spmm(ylab, contrib, num_classes, block_rows=None,
                           block_deg=None, deg_sub=None, interpret=interpret)
-        z_rows = jax.lax.psum_scatter(z_part, axes, scatter_dimension=0,
-                                      tiled=True)
-        if opts.correlation:
-            z_rows = row_l2_normalize_jnp(z_rows)
-        return z_rows
+        return combine_partials(z_part, labels_l, winv_l, dinv,
+                                mesh=mesh, axes=axes, opts=opts)
 
     # nocheck: jax has no replication rule for pallas_call inside shard_map
     fn = shard_map_nocheck(body, mesh=mesh,
@@ -145,9 +126,14 @@ def gee_distributed(edges, labels, num_classes: int,
                     local_backend: str = "segment_sum") -> jax.Array:
     """Distributed sparse GEE.  Returns Z with rows sharded over ``axes``.
 
-    ``edges`` is an ``EdgeList`` or a ``repro.core.plan.PreparedGraph``
-    (the latter reuses its cached self-loop augmentation instead of
-    re-concatenating per call).
+    The one-window multi-device instance of the ``repro.core.fold``
+    accumulator: per-device ``scatter_partial`` over the local edge
+    shard, then the shared ``combine_partials`` reduce-scatter +
+    row-local epilogue.  Diagonal augmentation is applied entirely in
+    the epilogue (degrees get the +1; no self-loop edges are appended),
+    exactly like the chunked and streamed_sharded instances.
+
+    ``edges`` is an ``EdgeList`` or a ``repro.core.plan.PreparedGraph``.
     ``pre_sharded=True`` skips the host-side shuffle/pad (the caller already
     produced device-ready arrays, e.g. the dry-run path).
     ``local_backend`` selects the per-shard compute: ``"segment_sum"`` (the
@@ -156,11 +142,8 @@ def gee_distributed(edges, labels, num_classes: int,
     Row padding: Z has ``pad_nodes(N, P)`` rows; callers slice ``[:N]``.
     """
     p = _axis_size(mesh, axes)
-    if isinstance(edges, EdgeList):
-        if opts.diag_aug:
-            edges = add_self_loops(edges)
-    else:                              # PreparedGraph (duck-typed: no cycle)
-        edges = edges.augmented(opts.diag_aug)
+    if not isinstance(edges, EdgeList):
+        edges = edges.base             # PreparedGraph (duck-typed: no cycle)
     n_pad = pad_nodes(edges.num_nodes, p)
     labels = jnp.asarray(labels, jnp.int32)
     if labels.shape[0] < n_pad:

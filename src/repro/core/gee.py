@@ -271,7 +271,9 @@ def gee(edges, labels, num_classes: int,
 
     Backends: ``sparse_jax`` (production default), ``pallas`` (ELL + Pallas
     kernel), ``chunked`` (bounded-memory streaming, see
-    ``repro.core.chunked``), ``dense_jax`` (oracle), ``scipy``
+    ``repro.core.chunked``), ``streamed_sharded`` (bounded-memory
+    streaming split across all devices, see ``repro.core.fold``),
+    ``dense_jax`` (oracle), ``scipy``
     (paper-faithful), and ``python_loop`` (original-GEE reference).
     ``auto`` picks via the ``repro.core.plan.select_backend`` cost model.
     See ``docs/backends.md`` for the full decision guide.

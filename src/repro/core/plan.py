@@ -64,8 +64,8 @@ from repro.core.gee import (ALL_OPTION_SETTINGS, GEEOptions, gee_dense_jax,
 from repro.graph.containers import (EdgeList, add_self_loops,
                                     edge_list_from_numpy, symmetrize)
 
-KNOWN_BACKENDS = ("sparse_jax", "pallas", "chunked", "dense_jax", "scipy",
-                  "python_loop")
+KNOWN_BACKENDS = ("sparse_jax", "pallas", "chunked", "streamed_sharded",
+                  "dense_jax", "scipy", "python_loop")
 
 # Working-set budget for the cost model's route-to-chunked decision.
 ENV_MEMORY_BUDGET = "REPRO_GEE_MEMORY_BUDGET_BYTES"
@@ -259,16 +259,52 @@ class PreparedGraph:
 # the cost model behind backend="auto"
 # ---------------------------------------------------------------------------
 
+def _bucketed_slot_estimate(edges: EdgeList) -> int:
+    """Total ELL slots after degree-bucketed packing of the augmented
+    graph (host-side O(E) bincount; the pow2 ladder is the packer's own).
+
+    On a skewed (power-law) degree distribution this is the number that
+    actually sizes the Pallas working set: every row occupies its
+    bucket's full width, so a graph whose *edge count* fits the budget
+    can still blow past it after packing (a hub row of degree d costs
+    pow2(d) slots; the long tail of degree-1 rows cost 8 slots each).
+    """
+    from repro.graph.ell import bucket_widths  # the ladder the packer uses
+
+    e = edges.num_edges
+    src = np.asarray(edges.src)[:e]
+    w = np.asarray(edges.weight)[:e]
+    deg = np.bincount(src[w != 0], minlength=edges.num_nodes) + 1  # + loop
+    widths = np.asarray(bucket_widths(int(deg.max(initial=1))))
+    return int(widths[np.searchsorted(widths, deg)].sum())
+
+
 def estimate_working_set_bytes(graph: PreparedGraph | EdgeList,
-                               num_classes: int) -> int:
-    """Rough in-memory working set of the non-streaming sparse path:
-    base + effective edge triples (src/dst/weight, self loops included),
-    the degree vector, and Z."""
+                               num_classes: int, *,
+                               backend: str = "sparse_jax") -> int:
+    """Rough in-memory working set, per backend family.
+
+    The default (``sparse_jax``) counts base + effective edge triples
+    (src/dst/weight, self loops included), the degree vector, and Z.
+    ``backend="pallas"`` instead counts the *post-packing* ELL slots
+    (:func:`_bucketed_slot_estimate`): cols + vals + the ylab/contrib
+    planes are 16 bytes per slot, and on skewed degree distributions
+    slots >> E -- the raw edge estimate would route graphs to ``pallas``
+    that cannot fit after bucketed packing.
+    """
     edges = graph.base if isinstance(graph, PreparedGraph) else graph
-    e_eff = edges.padded_size + edges.num_nodes      # with self loops
-    edge_bytes = 3 * 4 * (edges.padded_size + e_eff)  # base + effective
     n = edges.num_nodes
-    return edge_bytes + 4 * n + 4 * n * int(num_classes)
+    base_bytes = 3 * 4 * edges.padded_size
+    z_deg_bytes = 4 * n + 4 * n * int(num_classes)
+    if backend == "pallas":
+        if isinstance(graph, PreparedGraph):
+            slots = graph._memo(("ell_slots",),
+                                lambda: _bucketed_slot_estimate(edges))
+        else:
+            slots = _bucketed_slot_estimate(edges)
+        return base_bytes + 16 * slots + z_deg_bytes
+    e_eff = edges.padded_size + n                    # with self loops
+    return base_bytes + 3 * 4 * e_eff + z_deg_bytes
 
 
 def memory_budget_bytes() -> int:
@@ -279,24 +315,35 @@ def memory_budget_bytes() -> int:
 
 def select_backend(graph: PreparedGraph | EdgeList, num_classes: int, *,
                    device: str | None = None,
-                   budget_bytes: int | None = None) -> str:
+                   budget_bytes: int | None = None,
+                   num_devices: int | None = None) -> str:
     """The ``backend="auto"`` cost model.
 
     1. If the estimated working set exceeds the memory budget, stream:
-       ``chunked`` keeps O(chunk + N*K) whatever E is.
-    2. On a real TPU with K within a few 128-lanes, the Pallas ELL kernel
+       ``streamed_sharded`` when more than one device can fold disjoint
+       sub-windows in parallel, ``chunked`` on a single device -- either
+       way peak memory is O(window + N*K) whatever E is.
+    2. On a real TPU with K within a few 128-lanes *and* the ELL-aware
+       pallas estimate also inside the budget (bucketed packing can blow
+       up far past E on skewed degree distributions), the Pallas kernel
        wins the contraction.
     3. Everywhere else, the O(E) segment-sum path is the safe default (on
        CPU the kernel would run in interpret mode, strictly slower).
 
     ``auto`` never selects ``distributed`` or the host reference backends:
-    those change *where the data lives*, which is the caller's decision.
+    those change *where the data lives*, which is the caller's decision
+    (``streamed_sharded`` builds its own default mesh over the local
+    devices, so it stays a pure capacity decision).
+    ``num_devices=None`` asks jax for the local device count.
     """
     device = device or jax.default_backend()
     budget = memory_budget_bytes() if budget_bytes is None else budget_bytes
     if estimate_working_set_bytes(graph, num_classes) > budget:
-        return "chunked"
-    if device == "tpu" and num_classes <= PALLAS_MAX_CLASSES:
+        p = jax.device_count() if num_devices is None else int(num_devices)
+        return "streamed_sharded" if p > 1 else "chunked"
+    if (device == "tpu" and num_classes <= PALLAS_MAX_CLASSES
+            and estimate_working_set_bytes(
+                graph, num_classes, backend="pallas") <= budget):
         return "pallas"
     return "sparse_jax"
 
@@ -346,7 +393,8 @@ class GEEPlan:
         if backend not in KNOWN_BACKENDS:
             raise ValueError(
                 f"unknown backend {backend!r}; known: {KNOWN_BACKENDS} "
-                f"(+ 'auto'; 'distributed' needs a mesh -- use GEEEmbedder)")
+                f"(+ 'auto'; 'distributed' needs an explicit mesh -- use "
+                f"GEEEmbedder, or 'streamed_sharded' for the default mesh)")
         return GEEPlan(prepared=prepared, num_classes=int(num_classes),
                        opts=opts, backend=backend, chunk_edges=chunk_edges,
                        impl=impl)
@@ -379,6 +427,20 @@ class GEEPlan:
                                  detail=f"window={chunk} edges"))
             out.append(PlanStage("compute", "two_pass_stream",
                                  detail="degree fold + per-class fold"))
+        elif self.backend == "streamed_sharded":
+            from repro.graph.io import DEFAULT_CHUNK_EDGES
+
+            chunk = int(self.chunk_edges or DEFAULT_CHUNK_EDGES)
+            out.append(PlanStage(
+                "prep", "chunk_manifest",
+                cached=p.is_cached(("chunked", chunk)),
+                detail=f"window={chunk} edges, split across devices"))
+            out.append(PlanStage(
+                "compute", "window_shard_fold",
+                detail="per-device sub-window fold, donated partials"))
+            out.append(PlanStage(
+                "epilogue", "reduce_scatter_epilogue",
+                detail="psum_scatter + row-local diag-aug/row-norm"))
         elif self.backend == "dense_jax":
             out.append(PlanStage("compute", "dense_matmul",
                                  detail="A @ W oracle, O(N^2)"))
@@ -387,8 +449,10 @@ class GEEPlan:
                                  cached=p.is_cached(("host",)),
                                  detail="valid-prefix numpy triple"))
             out.append(PlanStage("compute", self.backend))
-        if o.correlation and self.backend not in ("chunked", "dense_jax",
-                                                  "scipy", "python_loop"):
+        if o.correlation and self.backend not in ("chunked",
+                                                  "streamed_sharded",
+                                                  "dense_jax", "scipy",
+                                                  "python_loop"):
             out.append(PlanStage("epilogue", "row_l2_normalize",
                                  detail=f"impl={self.impl}"))
         return tuple(out)
@@ -431,6 +495,12 @@ class GEEPlan:
 
             return gee_chunked(p.chunked(self.chunk_edges), labels, k, o,
                                impl=self.impl)
+        if self.backend == "streamed_sharded":
+            from repro.core.fold import gee_streamed_sharded
+
+            # default mesh over all local devices; rows come back [:N]
+            return gee_streamed_sharded(p.chunked(self.chunk_edges),
+                                        labels, k, o)
         if self.backend == "dense_jax":
             return gee_dense_jax(p.base, jnp.asarray(labels), k, o)
         src, dst, w = p.host_arrays()

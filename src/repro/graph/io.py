@@ -53,7 +53,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import struct
-from typing import Iterator, Tuple
+from typing import Iterator, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
@@ -75,8 +75,44 @@ assert _GEEB_HEADER.size <= _GEEB_HEADER_SIZE
 
 
 # ---------------------------------------------------------------------------
-# the chunked container (mmap- or array-backed)
+# the window-source protocol + chunked container (mmap- or array-backed)
 # ---------------------------------------------------------------------------
+
+@runtime_checkable
+class WindowSource(Protocol):
+    """Anything the fold pipelines can stream fixed-shape edge windows from.
+
+    The contract every GEE execution backend consumes
+    (``repro.core.fold``): ``windows()`` yields padded
+    :class:`~repro.graph.containers.EdgeList` views whose arrays are all
+    exactly ``window_edges`` long (weight-0 padding entries are exact
+    no-ops), so a jitted fold traces once per configuration.  Passing
+    ``pad_to=P*c`` pads every window so it splits into P equal disjoint
+    sub-windows -- how the ``streamed_sharded`` backend hands each
+    device its slice of a window at an O(1) offset, with no scatter of
+    the edge data on the host.
+
+    Implementations: an in-memory ``EdgeList`` (wrapped by
+    :func:`as_window_source`), :class:`ChunkedEdgeList` over host
+    arrays, and the window-parallel mmap ``.geeb`` reader
+    (:func:`open_window_parallel`) whose windows are O(1) offsets into
+    the on-disk blocks.
+    """
+
+    num_nodes: int
+    undirected: bool
+
+    @property
+    def num_edges(self) -> int: ...
+
+    @property
+    def window_edges(self) -> int: ...
+
+    @property
+    def num_windows(self) -> int: ...
+
+    def windows(self, pad_to: int | None = None) -> Iterator[EdgeList]: ...
+
 
 @dataclasses.dataclass(frozen=True)
 class ChunkedEdgeList:
@@ -115,17 +151,65 @@ class ChunkedEdgeList:
 
     @property
     def num_chunks(self) -> int:
+        """Number of stored windows.  An upper bound on what ``chunks()``
+        yields: all-padding windows are skipped at iteration time."""
         return max(1, -(-self.num_edges // self.effective_chunk_edges))
 
-    def chunks(self) -> Iterator[EdgeList]:
+    # WindowSource protocol aliases ---------------------------------------
+    @property
+    def window_edges(self) -> int:
+        return self.effective_chunk_edges
+
+    @property
+    def num_windows(self) -> int:
+        return self.num_chunks
+
+    def windows(self, pad_to: int | None = None) -> Iterator[EdgeList]:
+        return self.chunks(pad_to=pad_to)
+
+    def rechunked(self, chunk_edges: int) -> "ChunkedEdgeList":
+        """O(1) view with a different window width -- no data is copied
+        or re-read (mmap-backed sources keep their file offsets)."""
+        return dataclasses.replace(self, chunk_edges=int(chunk_edges))
+
+    def chunks(self, pad_to: int | None = None) -> Iterator[EdgeList]:
         """Yield padded ``EdgeList`` windows of identical shape.
 
-        Every chunk's arrays are exactly ``effective_chunk_edges`` long;
-        the final ragged chunk (and the single empty chunk of an edgeless
-        graph) is padded with weight-0 entries, which are exact no-ops for
-        every GEE formula.  ``num_edges`` on each chunk is the honest
-        valid count; jitted consumers should key on the arrays only.
+        Every chunk's arrays are exactly ``effective_chunk_edges`` long
+        (or ``pad_to``, if larger); the final ragged chunk is padded with
+        weight-0 entries, which are exact no-ops for every GEE formula.
+        ``num_edges`` on each chunk is the honest valid count; jitted
+        consumers should key on the arrays only.
+
+        Windows whose valid prefix is entirely weight-0 padding (e.g. a
+        tail of no-op entries left behind by symmetrizing padded storage)
+        are *skipped* -- every yielded window of a non-edgeless graph has
+        at least one nonzero-weight entry.  An edgeless graph still
+        yields its single all-padding no-op window, so shape-stable
+        consumers always see at least one window.
         """
+        c = self.effective_chunk_edges
+        pad = max(c, pad_to or 0)
+        if self.num_edges == 0:
+            yield edge_list_from_numpy(
+                np.empty(0, np.int32), np.empty(0, np.int32),
+                np.empty(0, np.float32), self.num_nodes, pad_to=pad)
+            return
+        for lo in range(0, self.num_edges, c):
+            hi = min(lo + c, self.num_edges)
+            assert hi > lo, "window with an empty valid prefix"
+            w = np.ascontiguousarray(self.weight[lo:hi])
+            if not np.any(w):
+                continue               # all-padding window: exact no-op
+            yield edge_list_from_numpy(
+                np.ascontiguousarray(self.src[lo:hi]),
+                np.ascontiguousarray(self.dst[lo:hi]),
+                w, self.num_nodes, pad_to=pad)
+
+    def _raw_windows(self) -> Iterator[EdgeList]:
+        """Every stored window, all-padding ones included -- the save /
+        convert paths need stored zero-weight entries to round-trip
+        exactly, where ``chunks()`` would (correctly) skip them."""
         c = self.effective_chunk_edges
         for lo in range(0, max(self.num_edges, 1), c):
             hi = min(lo + c, self.num_edges)
@@ -150,11 +234,24 @@ class ChunkedEdgeList:
     def from_edge_list(edges: EdgeList,
                        chunk_edges: int = DEFAULT_CHUNK_EDGES,
                        ) -> "ChunkedEdgeList":
-        """Wrap an in-memory (already-directed) ``EdgeList``'s valid prefix."""
+        """Wrap an in-memory (already-directed) ``EdgeList``'s valid prefix.
+
+        Zero-weight entries inside the valid prefix (stray padding, or
+        weight-0 no-op duplicates from upstream transforms) are dropped:
+        they contribute exactly zero to every GEE formula, and dropping
+        them guarantees no stored window -- the tail window when
+        ``chunk_edges`` does not divide E included -- is ever all-padding.
+        """
         src, dst, w = edges.valid_arrays()
+        keep = np.asarray(w) != 0
+        if not keep.all():
+            src = np.asarray(src)[keep]
+            dst = np.asarray(dst)[keep]
+            w = np.asarray(w)[keep]
         return ChunkedEdgeList(
             src=src, dst=dst, weight=w, num_nodes=edges.num_nodes,
-            chunk_edges=min(max(1, edges.num_edges), chunk_edges),
+            chunk_edges=min(max(1, int(np.asarray(src).shape[0])),
+                            chunk_edges),
             undirected=False)
 
 
@@ -383,7 +480,7 @@ def write_text(path: str, chunked: ChunkedEdgeList) -> str:
     with open(path, "w") as f:
         f.write(f"# nodes {chunked.num_nodes} edges {chunked.num_edges} "
                 f"undirected {int(chunked.undirected)}\n")
-        for ch in chunked.chunks():
+        for ch in chunked._raw_windows():
             e = ch.num_edges
             s = np.asarray(ch.src)[:e]
             d = np.asarray(ch.dst)[:e]
@@ -483,13 +580,51 @@ def open_edge_list(path: str, chunk_edges: int = DEFAULT_CHUNK_EDGES,
     return out
 
 
+def open_window_parallel(path: str, num_shards: int,
+                         chunk_edges: int = DEFAULT_CHUNK_EDGES,
+                         **open_kw) -> ChunkedEdgeList:
+    """Window-parallel edge-file reader for the ``streamed_sharded`` fold.
+
+    Opens ``path`` (mmap for ``.geeb``) and rounds the window width up to
+    a multiple of ``num_shards``, so every window splits into
+    ``num_shards`` equal, disjoint, contiguous sub-windows: shard ``d``
+    of window ``w`` is the slice ``[w*c + d*c/P, w*c + (d+1)*c/P)`` -- an
+    O(1) offset into the memory-mapped blocks, no host-side scatter.
+    The returned ``ChunkedEdgeList`` is an O(1) view; nothing is read
+    until windows are iterated.
+    """
+    out = open_edge_list(path, chunk_edges=chunk_edges, **open_kw)
+    per = -(-out.effective_chunk_edges // num_shards)
+    return out.rechunked(per * num_shards)
+
+
+def as_window_source(obj, chunk_edges: int = DEFAULT_CHUNK_EDGES
+                     ) -> WindowSource:
+    """Coerce to a :class:`WindowSource`.
+
+    ``ChunkedEdgeList`` passes through unchanged; an in-memory
+    ``EdgeList`` wraps its valid prefix (one window when it fits in
+    ``chunk_edges``); any other object exposing ``windows()`` is trusted
+    to conform to the protocol.
+    """
+    if isinstance(obj, ChunkedEdgeList):
+        return obj
+    if isinstance(obj, EdgeList):
+        return ChunkedEdgeList.from_edge_list(obj, chunk_edges)
+    if hasattr(obj, "windows"):
+        return obj
+    raise TypeError(f"cannot stream edge windows from "
+                    f"{type(obj).__name__!r}; expected an EdgeList, a "
+                    f"ChunkedEdgeList, or a WindowSource")
+
+
 def save_edge_list(path: str, chunked: ChunkedEdgeList) -> str:
     """Write a ``ChunkedEdgeList`` to any supported format (by suffix)."""
     suffix = os.path.splitext(path)[1].lower()
     if suffix == ".geeb":
         with BinaryEdgeWriter(path, chunked.num_nodes, chunked.num_edges,
                               chunked.undirected) as w:
-            for ch in chunked.chunks():
+            for ch in chunked._raw_windows():
                 e = ch.num_edges
                 w.append(np.asarray(ch.src)[:e], np.asarray(ch.dst)[:e],
                          np.asarray(ch.weight)[:e])

@@ -12,7 +12,14 @@ segment-sums balanced (straggler mitigation at the data level).
 shard's edge subset is packed into its own ELL plane over the full node range
 (every device produces a *partial* [N_pad, K] embedding, exactly like the
 segment-sum path), with one common width so the stacked planes stay
-rectangular for shard_map.
+rectangular for shard_map.  Edges are assigned to shards by *rank within
+their row* (edge r of row i goes to shard r mod P), which bounds every
+shard's row degree at ``ceil(deg_i / P)`` deterministically -- no random
+assignment can beat that bound -- and makes the packing reproducible.
+
+The ``streamed_sharded`` fold packs one plane *per window*; ``width=``
+pins the plane width (``stable_plane_width`` pow2-ladders the needed
+width) so at most O(log max_degree) distinct shapes ever reach jit.
 """
 
 from __future__ import annotations
@@ -43,37 +50,56 @@ def shard_edges(edges: EdgeList, num_shards: int, seed: int = 0,
     return edge_list_from_numpy(src, dst, w, edges.num_nodes, pad_to=total)
 
 
+def stable_plane_width(max_row_degree: int, num_shards: int = 1,
+                       base: int = 8) -> int:
+    """Pow2-laddered per-shard plane width for jit-shape stability.
+
+    The per-shard row degree under rank-interleaved assignment is at
+    most ``ceil(max_row_degree / num_shards)``; rounding that up to the
+    next power of two (floor ``base``) means successive windows of a
+    stream reuse at most O(log max_degree) distinct traced shapes
+    instead of one per window.
+    """
+    need = max(1, -(-max(int(max_row_degree), 0) // num_shards))
+    width = base
+    while width < need:
+        width *= 2
+    return width
+
+
 def shard_edges_to_ell(edges: EdgeList, num_shards: int, num_rows: int,
-                       seed: int = 0) -> Tuple[jax.Array, jax.Array]:
+                       seed: int = 0, width: int | None = None,
+                       ) -> Tuple[jax.Array, jax.Array]:
     """Pack each shard's edges into an ELL plane over all ``num_rows`` rows.
 
-    Returns (cols, vals) shaped [num_shards * num_rows, width] so they shard
-    as P(axes) on dim 0 inside shard_map; ``width`` is the max per-shard row
-    degree (random edge assignment keeps it near max_degree / num_shards).
-    Empty slots have vals == 0 / cols == 0, the usual exact-no-op padding.
+    Returns (cols, vals) shaped [num_shards * num_rows, width] so they
+    shard as P(axes) on dim 0 inside shard_map.  Edge r of row i lands in
+    shard ``r % num_shards``, slot ``r // num_shards`` (rank
+    interleaving), so the needed width is exactly
+    ``ceil(max_row_degree / num_shards)`` -- the deterministic optimum.
+    ``width=None`` packs at that minimum; passing
+    :func:`stable_plane_width` output keeps shapes stable across the
+    windows of a stream (raises if the requested width cannot hold the
+    densest row).  Empty slots have vals == 0 / cols == 0, the usual
+    exact-no-op padding.  ``seed`` is retained for API compatibility;
+    packing is deterministic.
     """
     from repro.graph.ell import _group_edges_by_row
 
-    e = edges.num_edges
-    src = np.asarray(edges.src)[:e]
-    dst = np.asarray(edges.dst)[:e]
-    w = np.asarray(edges.weight)[:e]
-    rng = np.random.default_rng(seed)
-    shard_of_edge = rng.permutation(np.arange(e) % num_shards)
+    del seed                      # deterministic rank-interleaved assignment
+    gs, gd, gw, counts, slot = _group_edges_by_row(edges, None)
+    need = max(1, -(-int(counts.max(initial=0)) // num_shards))
+    if width is None:
+        width = need
+    elif width < need:
+        raise ValueError(f"width {width} cannot hold the densest row: "
+                         f"need {need} (= ceil(max_degree / num_shards))")
 
-    groups = []
-    width = 1
-    for s in range(num_shards):
-        m = shard_of_edge == s
-        sub = edge_list_from_numpy(src[m], dst[m], w[m], num_rows)
-        gs, gd, gw, counts, slot = _group_edges_by_row(sub, None)
-        groups.append((gs, gd, gw, slot))
-        width = max(width, int(counts.max()) if counts.size else 1)
-
+    shard = slot % num_shards
+    sslot = slot // num_shards
     cols = np.zeros((num_shards, num_rows, width), np.int32)
     vals = np.zeros((num_shards, num_rows, width), np.float32)
-    for s, (gs, gd, gw, slot) in enumerate(groups):
-        cols[s, gs, slot] = gd
-        vals[s, gs, slot] = gw
+    cols[shard, gs, sslot] = gd
+    vals[shard, gs, sslot] = gw
     return (jnp.asarray(cols.reshape(num_shards * num_rows, width)),
             jnp.asarray(vals.reshape(num_shards * num_rows, width)))

@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this script:
@@ -21,11 +17,19 @@ Usage:
 
 Hillclimb knobs (recorded into the report): --attn-impl, --microbatches,
 --remat, --optimizer.
+
+The 512 fake CPU devices are forced only when run as a script (the env var
+must land before the first jax *backend* use, not before import): importing
+this module for its pure helpers (``collective_census``, ``_shape_bytes``)
+must not change the process's device count -- pytest collects every test
+module up front, so an import-time override would silently give the whole
+suite 512 devices.
 """
 
 import argparse
 import dataclasses
 import json
+import os
 import re
 import time
 import traceback
@@ -477,5 +481,18 @@ def main():
     return 1 if fails else 0
 
 
+def _force_fake_devices(count: int = 512) -> None:
+    """Give the host enough fake XLA CPU devices for the production meshes.
+
+    Must run before jax initializes its backend (first device use), which
+    holds on the ``python -m repro.launch.dryrun`` path: ``main()`` touches
+    devices only after argument parsing.
+    """
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={count} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+
 if __name__ == "__main__":
+    _force_fake_devices()
     raise SystemExit(main())

@@ -52,7 +52,8 @@ def main(argv=None):
                          "labels sidecar")
     ap.add_argument("--backend", default="sparse_jax",
                     choices=("sparse_jax", "dense_jax", "scipy",
-                             "python_loop", "pallas", "chunked", "auto"))
+                             "python_loop", "pallas", "chunked",
+                             "streamed_sharded", "auto"))
     ap.add_argument("--lap", action="store_true")
     ap.add_argument("--diag", action="store_true")
     ap.add_argument("--cor", action="store_true")
@@ -67,17 +68,26 @@ def main(argv=None):
                       correlation=args.cor)
 
     if args.edge_file:
-        # Out-of-core path: the edge list stays on disk, chunks stream
-        # through the two-pass accumulator (repro.core.chunked).
+        # Out-of-core path: the edge list stays on disk, windows stream
+        # through the shared fold (repro.core.fold).  'streamed_sharded'
+        # splits every window across all visible devices; everything else
+        # runs the single-device chunked fold.
         from repro.core.chunked import gee_chunked
+        from repro.core.fold import gee_streamed_sharded
         from repro.graph.io import (DEFAULT_CHUNK_EDGES, load_labels,
-                                    open_edge_list)
+                                    open_edge_list, open_window_parallel)
 
         if args.compare:
-            print("  (--compare ignored with --edge-file: the on-disk "
-                  "path always streams through the chunked backend)")
+            print("  (--compare with --edge-file: timing the on-disk "
+                  "streaming backends)")
         chunk = args.chunk_edges or DEFAULT_CHUNK_EDGES
-        chunked = open_edge_list(args.edge_file, chunk_edges=chunk)
+        streamed = args.backend == "streamed_sharded" or args.compare
+        if streamed:
+            chunked = open_window_parallel(args.edge_file,
+                                           jax.device_count(),
+                                           chunk_edges=chunk)
+        else:
+            chunked = open_edge_list(args.edge_file, chunk_edges=chunk)
         labels = load_labels(args.edge_file)
         if labels is None:
             labels = np.random.default_rng(args.seed).integers(
@@ -91,16 +101,25 @@ def main(argv=None):
         print(f"{args.edge_file}: N={chunked.num_nodes} "
               f"E={chunked.num_edges}"
               f"{' (undirected storage)' if chunked.undirected else ''} "
-              f"K={k} chunks={chunked.num_chunks}"
-              f"x{chunked.effective_chunk_edges} "
+              f"K={k} windows={chunked.num_windows}"
+              f"x{chunked.window_edges} "
               f"[{opts.tag()}]")
-        fn = lambda: gee_chunked(chunked, labels, k, opts)
-        dt = _time(fn)
-        z = np.asarray(fn())
-        eps = (2 if chunked.undirected else 1) * chunked.num_edges / dt
-        print(f"  chunked     : {dt*1e3:9.1f} ms   {eps/1e6:8.2f} M edges/s"
-              f"   Z[{z.shape[0]}x{z.shape[1]}] "
-              f"norm {np.linalg.norm(z):.4f}")
+        cells = []
+        if args.backend != "streamed_sharded" or args.compare:
+            cells.append(("chunked",
+                          lambda: gee_chunked(chunked, labels, k, opts)))
+        if streamed:
+            cells.append((f"streamed x{jax.device_count()}",
+                          lambda: gee_streamed_sharded(chunked, labels, k,
+                                                       opts)))
+        for name, fn in cells:
+            dt = _time(fn)
+            z = np.asarray(fn())
+            eps = (2 if chunked.undirected else 1) * chunked.num_edges / dt
+            print(f"  {name:12s}: {dt*1e3:9.1f} ms   "
+                  f"{eps/1e6:8.2f} M edges/s"
+                  f"   Z[{z.shape[0]}x{z.shape[1]}] "
+                  f"norm {np.linalg.norm(z):.4f}")
         return
 
     if args.sbm:
@@ -114,8 +133,8 @@ def main(argv=None):
     print(f"{name}: N={edges.num_nodes} E={edges.num_edges//2} K={k} "
           f"[{opts.tag()}]")
 
-    backends = (("sparse_jax", "chunked", "pallas", "auto", "dense_jax",
-                 "scipy", "python_loop")
+    backends = (("sparse_jax", "chunked", "streamed_sharded", "pallas",
+                 "auto", "dense_jax", "scipy", "python_loop")
                 if args.compare else (args.backend,))
     # One PreparedGraph for every cell: symmetrized upload, self-loop
     # augmentation, laplacian fold, ELL packing and the chunk manifest are

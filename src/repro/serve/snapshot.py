@@ -390,7 +390,8 @@ class RecoveredState:
 
 
 def recover(directory: str, *, verify: bool = True,
-            with_index: bool = True) -> RecoveredState:
+            with_index: bool = True,
+            cold_start: dict | None = None) -> RecoveredState:
     """Load the newest loadable snapshot under ``directory`` and replay the
     WAL past its watermark.
 
@@ -400,6 +401,15 @@ def recover(directory: str, *, verify: bool = True,
     once over the rows the replay dirtied.  Corrupt or partially-written
     snapshots (torn at SIGKILL time) fail digest verification and recovery
     silently falls back to the previous retained step.
+
+    ``cold_start`` handles the WAL-only directory (a crash before the
+    first snapshot, or a log shipped without its snapshot store): pass
+    ``{"num_nodes": N, "num_classes": K}`` (plus optionally ``"opts"``,
+    a :class:`GEEOptions` or its kwargs dict) and recovery builds a
+    fresh empty :class:`IncrementalGEE` at watermark -1 and replays the
+    *entire* WAL into it -- a cold-but-consistent state instead of a
+    ``FileNotFoundError``.  With no snapshot, no WAL records and no
+    ``cold_start``, the error still raises (nothing to recover from).
     """
     mgr = CheckpointManager(os.path.join(directory, "snapshots"), interval=1)
     try:
@@ -407,13 +417,22 @@ def recover(directory: str, *, verify: bool = True,
     finally:
         mgr.close()
     if step is None:
-        raise FileNotFoundError(
-            f"no loadable snapshot under {directory!r} "
-            f"(never snapshotted, or every retained snapshot is corrupt)")
-    inc = restore_incremental(arrays, extra)
-    index = (restore_index(arrays, extra, inc)
-             if with_index and extra.get("has_index") else None)
-    watermark = int(extra["watermark"])
+        if cold_start is None:
+            raise FileNotFoundError(
+                f"no loadable snapshot under {directory!r} "
+                f"(never snapshotted, or every retained snapshot is corrupt"
+                f"; pass cold_start= to replay a WAL-only directory)")
+        opts = cold_start.get("opts", GEEOptions())
+        if isinstance(opts, dict):
+            opts = GEEOptions(**opts)
+        inc = IncrementalGEE(int(cold_start["num_nodes"]),
+                             int(cold_start["num_classes"]), opts)
+        index, watermark, extra = None, -1, {}
+    else:
+        inc = restore_incremental(arrays, extra)
+        index = (restore_index(arrays, extra, inc)
+                 if with_index and extra.get("has_index") else None)
+        watermark = int(extra["watermark"])
 
     log = DeltaLog(os.path.join(directory, "wal"))
     tracker = DirtyRowTracker(inc.n)

@@ -1,0 +1,259 @@
+"""The shared fold (repro/core/fold.py) and its streamed_sharded backend:
+WindowSource conformance, per-window ELL packing, single- and multi-device
+equivalence with gee_sparse_jax, and plan/embedder routing."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.fold import (combine_partials, gee_streamed_sharded,
+                             pad_nodes, stream_fold)
+from repro.core.gee import (ALL_OPTION_SETTINGS, GEEOptions, gee,
+                            gee_sparse_jax)
+from repro.graph.containers import edge_list_from_numpy, symmetrize
+from repro.graph.io import (ChunkedEdgeList, WindowSource, as_window_source,
+                            open_window_parallel, save_edge_list)
+from repro.graph.partition import shard_edges_to_ell, stable_plane_width
+from conftest import run_with_devices
+
+
+def _graph(n=120, e=700, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = (src + 1 + rng.integers(0, n - 1, e)) % n
+    w = (rng.random(e) + 0.1).astype(np.float32)
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    labels = rng.integers(0, 4, n).astype(np.int32)
+    labels[rng.random(n) < 0.2] = -1        # unlabeled vertices
+    return edges, labels
+
+
+# ---------------------------------------------------------------------------
+# WindowSource protocol
+# ---------------------------------------------------------------------------
+
+def test_window_source_protocol_implementations(tmp_path):
+    edges, _labels = _graph()
+    ch = ChunkedEdgeList.from_edge_list(edges, chunk_edges=97)
+    assert isinstance(ch, WindowSource)
+
+    # an EdgeList adapts through as_window_source
+    ws = as_window_source(edges, chunk_edges=97)
+    assert isinstance(ws, WindowSource)
+    assert (ws.num_nodes, ws.num_edges) == (edges.num_nodes, edges.num_edges)
+    assert ws.num_windows == -(-edges.num_edges // 97)
+
+    # the mmap-backed reader is one too
+    p = str(tmp_path / "g.geeb")
+    save_edge_list(p, ch)
+    par = open_window_parallel(p, num_shards=4, chunk_edges=97)
+    assert isinstance(par, WindowSource)
+    # window width rounded up so every window splits into 4 equal
+    # sub-windows with O(1) offsets
+    assert par.window_edges % 4 == 0
+    assert par.window_edges >= 97
+
+    with pytest.raises(TypeError):
+        as_window_source(object())
+
+
+def test_windows_pad_to_splits_evenly():
+    edges, _labels = _graph(e=701)          # odd E: ragged everywhere
+    ws = as_window_source(edges, chunk_edges=97)
+    g = pad_nodes(ws.window_edges, 4)
+    for w in ws.windows(pad_to=g):
+        assert w.padded_size == g
+        assert g % 4 == 0
+        np.testing.assert_array_equal(np.asarray(w.weight)[w.num_edges:], 0.0)
+    # valid prefixes still cover every edge exactly once
+    total = sum(w.num_edges for w in ws.windows(pad_to=g))
+    assert total == edges.num_edges
+
+
+# ---------------------------------------------------------------------------
+# rank-interleaved ELL packing
+# ---------------------------------------------------------------------------
+
+def test_stable_plane_width_ladder():
+    assert stable_plane_width(0) == 8                  # floor
+    assert stable_plane_width(5) == 8
+    assert stable_plane_width(9) == 16
+    assert stable_plane_width(100, num_shards=4) == 32  # ceil(100/4)=25 -> 32
+    assert stable_plane_width(100, num_shards=128) == 8
+
+
+def test_shard_ell_width_is_deterministic_optimum():
+    edges, _labels = _graph()
+    deg = np.bincount(np.asarray(edges.src)[: edges.num_edges],
+                      minlength=edges.num_nodes)
+    for p in (1, 2, 4):
+        cols, vals = shard_edges_to_ell(edges, p, num_rows=edges.num_nodes)
+        assert cols.shape[1] == -(-int(deg.max()) // p)
+        # union of shard planes reconstructs the total edge mass
+        np.testing.assert_allclose(
+            float(jnp.sum(vals)),
+            float(np.asarray(edges.weight)[: edges.num_edges].sum()),
+            rtol=1e-5)
+
+
+def test_shard_ell_pinned_width_and_too_small():
+    edges, _labels = _graph()
+    deg = np.bincount(np.asarray(edges.src)[: edges.num_edges],
+                      minlength=edges.num_nodes)
+    width = stable_plane_width(int(deg.max()), 2)
+    cols, _vals = shard_edges_to_ell(edges, 2, num_rows=edges.num_nodes,
+                                     width=width)
+    assert cols.shape[1] == width
+    with pytest.raises(ValueError, match="cannot hold the densest row"):
+        shard_edges_to_ell(edges, 2, num_rows=edges.num_nodes, width=1)
+
+
+# ---------------------------------------------------------------------------
+# single-device equivalence (the main process has one CPU device)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opts", ALL_OPTION_SETTINGS, ids=lambda o: o.tag())
+def test_streamed_sharded_matches_reference_single_device(opts):
+    edges, labels = _graph()
+    zr = np.asarray(gee_sparse_jax(edges, jnp.asarray(labels), 4, opts))
+    zs = np.asarray(gee_streamed_sharded(
+        as_window_source(edges, chunk_edges=97), labels, 4, opts))
+    np.testing.assert_allclose(zs, zr, atol=1e-5)
+
+
+def test_streamed_sharded_from_geeb_file(tmp_path):
+    edges, labels = _graph()
+    ch = ChunkedEdgeList.from_edge_list(edges, chunk_edges=97)
+    p = str(tmp_path / "g.geeb")
+    save_edge_list(p, ch)
+    opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+    zr = np.asarray(gee_sparse_jax(edges, jnp.asarray(labels), 4, opts))
+    zs = np.asarray(gee_streamed_sharded(
+        open_window_parallel(p, num_shards=jax.device_count(),
+                             chunk_edges=97), labels, 4, opts))
+    np.testing.assert_allclose(zs, zr, atol=1e-5)
+
+
+def test_streamed_sharded_rejects_unknown_local_backend():
+    edges, labels = _graph()
+    with pytest.raises(ValueError, match="unknown local_backend"):
+        gee_streamed_sharded(edges, labels, 4, local_backend="nope")
+
+
+def test_stream_fold_state_is_accumulator_sized():
+    """The streaming contract: fold state is O(N + N*K), not O(E)."""
+    edges, labels = _graph()
+    ws = as_window_source(edges, chunk_edges=97)
+    z, winv, dinv = stream_fold(ws, labels, 4,
+                                GEEOptions(laplacian=True))
+    assert z.shape == (edges.num_nodes * 4,)
+    assert winv.shape == (4,)
+    assert dinv.shape == (edges.num_nodes,)
+
+
+# ---------------------------------------------------------------------------
+# plan / embedder routing
+# ---------------------------------------------------------------------------
+
+def test_plan_executes_streamed_sharded():
+    from repro.core.plan import GEEPlan, PreparedGraph
+
+    edges, labels = _graph()
+    opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+    prep = PreparedGraph.wrap(edges)
+    plan = GEEPlan.build(prep, 4, opts, backend="streamed_sharded",
+                         chunk_edges=97)
+    z = np.asarray(plan.execute(labels))
+    zr = np.asarray(gee(prep, labels, 4, opts, backend="sparse_jax"))
+    np.testing.assert_allclose(z, zr, atol=1e-5)
+    kinds = [(s.kind, s.name) for s in plan.stages]
+    assert ("compute", "window_shard_fold") in kinds
+
+
+def test_embedder_streamed_sharded_in_memory_and_file(tmp_path):
+    from repro.core.api import GEEEmbedder
+
+    edges, labels = _graph()
+    opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+    zr = np.asarray(gee_sparse_jax(edges, jnp.asarray(labels), 4, opts))
+
+    emb = GEEEmbedder(num_classes=4, options=opts,
+                      backend="streamed_sharded", chunk_edges=97)
+    np.testing.assert_allclose(np.asarray(emb.fit_transform(edges, labels)),
+                               zr, atol=1e-5)
+
+    p = str(tmp_path / "g.geeb")
+    save_edge_list(p, ChunkedEdgeList.from_edge_list(edges, chunk_edges=97))
+    z_file = emb.fit_transform_file(p, labels)
+    np.testing.assert_allclose(np.asarray(z_file), zr, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# multi-device: subprocess with fake XLA devices
+# ---------------------------------------------------------------------------
+
+STREAM_SNIPPET = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.fold import gee_streamed_sharded
+from repro.core.gee import gee_sparse_jax, ALL_OPTION_SETTINGS
+from repro.graph.io import as_window_source
+from repro.graph.sbm import sample_sbm
+assert jax.device_count() == 4
+s = sample_sbm(500, seed=21)
+ws = as_window_source(s.edges, chunk_edges=211)
+for opts in ALL_OPTION_SETTINGS:
+    zs = gee_streamed_sharded(ws, s.labels, s.num_classes, opts,
+                              local_backend={local!r})
+    zr = gee_sparse_jax(s.edges, jnp.asarray(s.labels), s.num_classes, opts)
+    assert np.allclose(np.asarray(zs), np.asarray(zr), atol=1e-5), opts.tag()
+print("OK")
+"""
+
+
+def test_four_devices_all_option_settings():
+    assert "OK" in run_with_devices(
+        STREAM_SNIPPET.format(local="segment_sum"), 4)
+
+
+def test_four_devices_pallas_local_backend():
+    assert "OK" in run_with_devices(STREAM_SNIPPET.format(local="pallas"), 4)
+
+
+def test_four_devices_geeb_stream_and_auto_routing():
+    """End-to-end on-disk: .geeb windows split across 4 devices, and
+    select_backend routes there when the estimate exceeds the budget."""
+    code = """
+import numpy as np, jax, jax.numpy as jnp, tempfile, os
+from repro.core.fold import gee_streamed_sharded
+from repro.core.gee import GEEOptions, gee_sparse_jax
+from repro.core.plan import select_backend
+from repro.graph.io import (ChunkedEdgeList, open_window_parallel,
+                            save_edge_list)
+from repro.graph.sbm import sample_sbm
+s = sample_sbm(500, seed=22)
+assert select_backend(s.edges, s.num_classes, budget_bytes=16) \\
+    == "streamed_sharded"
+d = tempfile.mkdtemp()
+p = os.path.join(d, "g.geeb")
+save_edge_list(p, ChunkedEdgeList.from_edge_list(s.edges, 211))
+ws = open_window_parallel(p, num_shards=4, chunk_edges=211)
+assert ws.window_edges % 4 == 0
+opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+zs = gee_streamed_sharded(ws, s.labels, s.num_classes, opts)
+zr = gee_sparse_jax(s.edges, jnp.asarray(s.labels), s.num_classes, opts)
+assert np.allclose(np.asarray(zs), np.asarray(zr), atol=1e-5)
+print("OK")
+"""
+    assert "OK" in run_with_devices(code, 4)
+
+
+def test_combine_partials_shared_by_both_backends():
+    """Structural: distributed and streamed_sharded call the *same*
+    combine tail (one reduce-scatter + row-local epilogue)."""
+    import repro.core.distributed as dist
+    import repro.core.fold as fold
+
+    assert dist.combine_partials is fold.combine_partials
+    assert dist.pad_nodes is fold.pad_nodes
+    assert combine_partials is fold.combine_partials

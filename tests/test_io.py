@@ -145,6 +145,64 @@ def test_empty_graph_yields_one_padded_noop_chunk(tmp_path):
     np.testing.assert_array_equal(np.asarray(chunk.weight), 0.0)
 
 
+def test_all_padding_tail_window_skipped():
+    """Regression (streamed fold): a stored tail whose weights are all
+    zero used to reach consumers as an all-padding window.  ``chunks()``
+    must skip it, and every yielded window's valid prefix must contribute
+    at least one real edge."""
+    e, chunk = 10, 4                      # chunk does not divide E
+    src = np.arange(e, dtype=np.int32) % 5
+    dst = (src + 1) % 5
+    w = np.ones(e, np.float32)
+    w[8:] = 0.0                           # final ragged window: all zeros
+    ch = ChunkedEdgeList(src=src, dst=dst, weight=w, num_nodes=5,
+                         chunk_edges=chunk)
+    windows = list(ch.chunks())
+    assert len(windows) == 2              # third (all-padding) one skipped
+    assert len(windows) < ch.num_chunks   # num_chunks is an upper bound
+    for win in windows:
+        assert np.any(np.asarray(win.weight)), "all-padding window yielded"
+    # the raw storage iterator still sees every stored window (save paths)
+    assert len(list(ch._raw_windows())) == ch.num_chunks == 3
+
+
+def test_from_edge_list_drops_zero_weight_entries():
+    from repro.graph.containers import edge_list_from_numpy
+
+    edges = edge_list_from_numpy(np.array([0, 1, 2, 3]),
+                                 np.array([1, 2, 3, 0]),
+                                 np.array([1.0, 0.0, 2.0, 0.0]), 4)
+    ch = ChunkedEdgeList.from_edge_list(edges, chunk_edges=64)
+    assert ch.num_edges == 2              # exact no-ops never stored
+    np.testing.assert_array_equal(np.asarray(ch.weight), [1.0, 2.0])
+    # an all-zero-weight graph degrades to the empty-graph contract:
+    # one all-padding no-op window, nothing yielded is malformed
+    empty = ChunkedEdgeList.from_edge_list(
+        edge_list_from_numpy(np.array([0]), np.array([1]),
+                             np.array([0.0]), 2), chunk_edges=8)
+    assert empty.num_edges == 0
+    (win,) = list(empty.chunks())
+    assert win.num_edges == 0 and win.padded_size == 1
+
+
+def test_zero_weight_tail_round_trips_through_save(tmp_path):
+    """save_edge_list streams via the *raw* windows: stored zero-weight
+    entries must survive a .geeb round-trip byte-exact (the writer
+    enforces the declared edge count)."""
+    e = 10
+    src = np.arange(e, dtype=np.int32) % 5
+    dst = (src + 1) % 5
+    w = np.ones(e, np.float32)
+    w[8:] = 0.0
+    ch = ChunkedEdgeList(src=src, dst=dst, weight=w, num_nodes=5,
+                         chunk_edges=4)
+    p = str(tmp_path / "tail.geeb")
+    save_edge_list(p, ch)
+    back = open_edge_list(p, chunk_edges=4)
+    assert back.num_edges == e
+    np.testing.assert_array_equal(np.asarray(back.weight), w)
+
+
 def test_to_edge_list_symmetrizes_undirected_storage():
     rng = np.random.default_rng(1)
     ch = _random_chunked(rng, e=50, undirected=True)

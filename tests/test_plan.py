@@ -213,8 +213,10 @@ def test_plan_rejects_unknown_backend():
 
 def test_select_backend_cost_model():
     edges = _random_edges()
-    # tiny budget -> out-of-core streaming
-    assert select_backend(edges, 4, budget_bytes=16) == "chunked"
+    # tiny budget -> out-of-core streaming (pin num_devices: the default
+    # asks jax, and the ambient device count is the suite's, not ours)
+    assert select_backend(edges, 4, budget_bytes=16,
+                          num_devices=1) == "chunked"
     # ample budget off-TPU -> the segment-sum default
     assert select_backend(edges, 4, device="cpu",
                           budget_bytes=1 << 40) == "sparse_jax"
@@ -224,6 +226,45 @@ def test_select_backend_cost_model():
     assert select_backend(edges, 100_000, device="tpu",
                           budget_bytes=1 << 40) == "sparse_jax"
     assert estimate_working_set_bytes(edges, 4) > 0
+
+
+def test_select_backend_streams_across_devices_over_budget():
+    edges = _random_edges()
+    # over budget + >1 device: split every window across the mesh
+    assert select_backend(edges, 4, budget_bytes=16,
+                          num_devices=4) == "streamed_sharded"
+    # a single device still streams through the chunked fold
+    assert select_backend(edges, 4, budget_bytes=16,
+                          num_devices=1) == "chunked"
+
+
+def test_pallas_estimate_sees_ell_padding_blowup():
+    """Regression (cost model): on a skewed degree distribution the
+    bucketed ELL packing costs far more than the raw edge count -- the
+    flat estimate used to route hub graphs to ``pallas`` that could not
+    fit after packing."""
+    n = 2000                               # star: hub 0 <-> every other node
+    hub = np.zeros(n - 1, np.int64)
+    spokes = np.arange(1, n, dtype=np.int64)
+    edges = edge_list_from_numpy(np.concatenate([hub, spokes]),
+                                 np.concatenate([spokes, hub]), None, n)
+    flat = estimate_working_set_bytes(edges, 4)
+    packed = estimate_working_set_bytes(edges, 4, backend="pallas")
+    # hub row pads to pow2(~n) slots; the tail pads to the 8-wide bucket
+    assert packed > 1.5 * flat
+    # budget between the two: the kernel must NOT be selected on TPU...
+    budget = (flat + packed) // 2
+    assert flat < budget < packed
+    assert select_backend(edges, 4, device="tpu",
+                          budget_bytes=budget) == "sparse_jax"
+    # ...but a budget that covers the packed set still picks it
+    assert select_backend(edges, 4, device="tpu",
+                          budget_bytes=1 << 40) == "pallas"
+    # PreparedGraph memoizes the O(E) slot count under ("ell_slots",)
+    prep = PreparedGraph.wrap(edges)
+    assert estimate_working_set_bytes(prep, 4, backend="pallas") \
+        == estimate_working_set_bytes(prep, 4, backend="pallas")
+    assert prep.is_cached(("ell_slots",))
 
 
 def test_auto_routes_to_chunked_by_budget(monkeypatch):

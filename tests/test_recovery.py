@@ -186,6 +186,57 @@ def test_recover_without_snapshot_raises(tmp_path):
         recover(str(tmp_path / "empty"))
 
 
+def test_recover_wal_only_cold_start(tmp_path):
+    """A crash before the first snapshot leaves a WAL-only directory;
+    ``cold_start`` must replay the full log into a fresh accumulator and
+    match an uninterrupted in-memory run -- not raise."""
+    opts = GEEOptions(laplacian=True, diag_aug=True)
+    k = 3
+    ref = IncrementalGEE(N, k, opts)
+    log = DeltaLog(os.path.join(str(tmp_path), "wal"))
+    rng = np.random.default_rng(8)
+    for _ in range(4):
+        batch = log.append([_edge_batch(rng), _label_batch(rng, k)])
+        for d in batch:
+            ref.apply(d)
+
+    # no snapshot + no cold_start still raises (nothing to recover from)
+    with pytest.raises(FileNotFoundError):
+        recover(str(tmp_path))
+
+    st = recover(str(tmp_path), cold_start={"num_nodes": N,
+                                            "num_classes": k,
+                                            "opts": opts})
+    assert st.snapshot_step is None
+    assert st.snapshot_watermark == -1
+    assert st.replayed_deltas == 8
+    assert st.inc.applied_seq == ref.applied_seq == 7
+    np.testing.assert_array_equal(st.inc.labels, ref.labels)
+    np.testing.assert_array_equal(st.inc.embedding(), ref.embedding())
+
+    # opts may also arrive as a plain kwargs dict (e.g. from a config file)
+    st2 = recover(str(tmp_path), cold_start={
+        "num_nodes": N, "num_classes": k,
+        "opts": {"laplacian": True, "diag_aug": True}})
+    np.testing.assert_array_equal(st2.inc.embedding(), ref.embedding())
+
+
+def test_recover_cold_start_empty_log_dir(tmp_path):
+    """cold_start over a directory with an *empty* WAL recovers to the
+    cold consistent state (watermark -1, zero embedding), not raise --
+    and DeltaLog.replay over a fresh directory yields nothing."""
+    log = DeltaLog(os.path.join(str(tmp_path), "wal"))
+    assert log.head_seq == -1
+    assert list(log.replay(after_seq=-1)) == []
+
+    st = recover(str(tmp_path), cold_start={"num_nodes": 10,
+                                            "num_classes": 2})
+    assert st.replayed_deltas == 0
+    assert st.inc.applied_seq == -1
+    np.testing.assert_array_equal(st.inc.embedding(),
+                                  np.zeros((10, 2), np.float32))
+
+
 def test_wal_prune_respects_retained_snapshots(tmp_path):
     """Every snapshot the manager keeps must stay replayable: the WAL is
     pruned to the *oldest retained* snapshot, not the newest."""
