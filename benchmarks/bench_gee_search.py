@@ -47,8 +47,50 @@ def _time_search(index, queries, k, repeats, **kw):
     return min(ts)
 
 
+def _fused_query_cell(z, labels, num_classes, queries, k, repeats, seed):
+    """Fused score-and-top-k vs staged scores+masked_topk on the pallas
+    query path (``REPRO_GEE_FUSED`` flips routing per-call).  Off-TPU the
+    kernels run in interpret mode, so this is parity documentation; the
+    headline gate lives in the TPU-capable runs."""
+    import os
+
+    from repro.search.index import ClassPartitionedIndex
+
+    n = z.shape[0]
+    q = z[np.random.default_rng(seed).integers(0, n, queries)]
+    index = ClassPartitionedIndex.build(z, labels, num_classes,
+                                        impl="pallas")
+    prev = os.environ.get("REPRO_GEE_FUSED")
+    try:
+        os.environ["REPRO_GEE_FUSED"] = "0"
+        ids_s, sc_s = (np.asarray(a) for a in
+                       index.search(q, k, brute_force=True))
+        t_staged = _time_search(index, q, k, repeats, brute_force=True)
+        os.environ["REPRO_GEE_FUSED"] = "1"
+        ids_f, sc_f = (np.asarray(a) for a in
+                       index.search(q, k, brute_force=True))
+        t_fused = _time_search(index, q, k, repeats, brute_force=True)
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_GEE_FUSED", None)
+        else:
+            os.environ["REPRO_GEE_FUSED"] = prev
+    assert np.array_equal(ids_s, ids_f), \
+        "fused top-k returned different neighbor ids than staged"
+    np.testing.assert_allclose(sc_f, sc_s, atol=1e-5)
+    return {"nodes": int(n), "queries": int(queries), "k": int(k),
+            "device": jax.default_backend(),
+            "staged_s": t_staged, "fused_s": t_fused,
+            "fused_query_speedup": t_staged / t_fused}
+
+
 def run(nodes=NODES, queries=256, k=10, repeats=3, seed=0):
     rows = []
+    fused_cell = None
+    # interpret mode makes the pallas query path slow off-TPU: run the
+    # fused-vs-staged cell on the smallest graph there, largest on TPU
+    on_tpu = jax.default_backend() == "tpu"
+    fused_n = max(nodes) if on_tpu else min(nodes)
     for n in nodes:
         s = sample_sbm(n, seed=seed)
         emb = GEEEmbedder(num_classes=s.num_classes,
@@ -97,7 +139,18 @@ def run(nodes=NODES, queries=256, k=10, repeats=3, seed=0):
               f"ivf={row['qps_ivf']:10,.0f} QPS  "
               f"bf={row['qps_brute_force']:10,.0f} QPS  "
               f"recall@{k}={rec_default:.4f} (full-probe {rec_full:.1f})")
-    return rows
+
+        if n == fused_n:
+            fq = queries if on_tpu else min(queries, 64)
+            fused_cell = _fused_query_cell(z, s.labels, s.num_classes,
+                                           fq, k, repeats, seed)
+            print(f"  fused query path (N={n}, {fused_cell['device']}): "
+                  f"staged={fused_cell['staged_s']*1e3:7.1f}ms  "
+                  f"fused={fused_cell['fused_s']*1e3:7.1f}ms  "
+                  f"{fused_cell['fused_query_speedup']:5.2f}x"
+                  + ("" if on_tpu
+                     else "  [interpret mode: parity only]"))
+    return rows, fused_cell
 
 
 def main(argv=None):
@@ -116,11 +169,16 @@ def main(argv=None):
                          "on any graph (0 disables)")
     args = ap.parse_args(argv)
     nodes = tuple(int(x) for x in args.nodes.split(",") if x)
-    rows = run(nodes, args.queries, args.k, args.repeats, args.seed)
+    rows, fused_cell = run(nodes, args.queries, args.k, args.repeats,
+                           args.seed)
     if args.json:
         payload = {"benchmark": "gee_search",
                    "backend": jax.default_backend(),
-                   "opts": OPTS.tag(), "rows": rows}
+                   "opts": OPTS.tag(), "rows": rows,
+                   "fused_cell": fused_cell,
+                   "fused_query_speedup":
+                       fused_cell["fused_query_speedup"]
+                       if fused_cell else None}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")

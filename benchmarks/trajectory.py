@@ -80,11 +80,14 @@ def _extract(payload: dict) -> dict:
         put("rss_growth", payload.get("rss_growth"), LOWER)
     elif bench == "gee_plan":
         put("prep_reuse_speedup", payload.get("worst_speedup"), HIGHER)
+        put("fused_speedup", payload.get("fused_speedup"), HIGHER)
     elif bench == "gee_search":
         row = _last_row(payload)
         if row:
             put("qps_ivf", row.get("qps_ivf"), HIGHER)
             put("recall_at_k", row.get("recall_at_k_default"), HIGHER)
+        put("fused_query_speedup", payload.get("fused_query_speedup"),
+            HIGHER)
     elif bench == "gee_serve":
         rec = payload.get("recovery", {})
         put("recover_state_s", rec.get("t_recover_state"), LOWER)

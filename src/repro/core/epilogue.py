@@ -125,6 +125,26 @@ def diag_aug_epilogue(z: jax.Array, labels: jax.Array, winv: jax.Array,
     return z.at[jnp.arange(n), ys].add(add)
 
 
+def apply_epilogue(z: jax.Array, labels: jax.Array, winv: jax.Array,
+                   dinv: jax.Array, *, opts, impl: str = "jnp") -> jax.Array:
+    """The whole O(rows*K) epilogue on an already-shaped [rows, K] block.
+
+    This is the single composition every backend tail delegates to --
+    ``finalize`` (chunked streaming), ``repro.core.fold.combine_partials``
+    (the shard_map row-local tail), and the residual fixup of the fused
+    Pallas path (``repro.kernels.gee_fused``) -- so the option order
+    (diag-aug, then correlation) and the shared clamps live in exactly
+    one place.  ``labels``/``dinv`` are row-aligned with ``z`` (slices
+    for a sharded block); ``impl="jnp"`` keeps it safe inside any
+    jit/shard_map body.
+    """
+    if opts.diag_aug:
+        z = diag_aug_epilogue(z, labels, winv, dinv)
+    if opts.correlation:
+        z = row_l2_normalize(z, impl=impl)
+    return z
+
+
 @partial(jax.jit, static_argnames=("num_classes", "opts", "impl"))
 def finalize(z_flat: jax.Array, labels: jax.Array, winv: jax.Array,
              dinv: jax.Array, *, num_classes: int, opts,
@@ -137,14 +157,10 @@ def finalize(z_flat: jax.Array, labels: jax.Array, winv: jax.Array,
     """
     n = dinv.shape[0]
     z = z_flat.reshape(n, num_classes)
-    if opts.diag_aug:
-        z = diag_aug_epilogue(z, labels, winv, dinv)
-    if opts.correlation:
-        z = row_l2_normalize(z, impl=impl)
-    return z
+    return apply_epilogue(z, labels, winv, dinv, opts=opts, impl=impl)
 
 
 __all__ = ["EPS_NORM", "ROW_NORM_IMPLS", "row_l2_normalize",
            "row_l2_normalize_jnp", "row_l2_normalize_np",
            "inv_sqrt_degrees", "inv_sqrt_degrees_np", "diag_aug_epilogue",
-           "finalize"]
+           "apply_epilogue", "finalize"]

@@ -46,8 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.epilogue import (diag_aug_epilogue, finalize,
-                                 inv_sqrt_degrees, row_l2_normalize_jnp)
+from repro.core.epilogue import apply_epilogue, finalize, inv_sqrt_degrees
 from repro.core.gee import GEEOptions, class_weight_inv
 from repro.distributed.compat import shard_map, shard_map_nocheck
 
@@ -134,18 +133,16 @@ def combine_partials(z_part, labels, winv, dinv, *, mesh: Mesh,
     """
     z_rows = jax.lax.psum_scatter(z_part, axes, scatter_dimension=0,
                                   tiled=True)
-    if opts.diag_aug:
-        rows_per = z_rows.shape[0]
-        lin = 0                        # linear device index, row-major in axes
-        for a in axes:
-            lin = lin * mesh.shape[a] + jax.lax.axis_index(a)
-        off = lin * rows_per
-        labels_l = jax.lax.dynamic_slice_in_dim(labels, off, rows_per)
-        dinv_l = jax.lax.dynamic_slice_in_dim(dinv, off, rows_per)
-        z_rows = diag_aug_epilogue(z_rows, labels_l, winv, dinv_l)
-    if opts.correlation:
-        z_rows = row_l2_normalize_jnp(z_rows)
-    return z_rows
+    rows_per = z_rows.shape[0]
+    lin = 0                            # linear device index, row-major in axes
+    for a in axes:
+        lin = lin * mesh.shape[a] + jax.lax.axis_index(a)
+    off = lin * rows_per
+    labels_l = jax.lax.dynamic_slice_in_dim(labels, off, rows_per)
+    dinv_l = jax.lax.dynamic_slice_in_dim(dinv, off, rows_per)
+    # the one shared epilogue composition (repro.core.epilogue), row-local
+    return apply_epilogue(z_rows, labels_l, winv, dinv_l, opts=opts,
+                          impl="jnp")
 
 
 # ---------------------------------------------------------------------------

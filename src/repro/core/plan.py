@@ -348,6 +348,31 @@ def select_backend(graph: PreparedGraph | EdgeList, num_classes: int, *,
     return "sparse_jax"
 
 
+def select_fused(backend: str, opts: GEEOptions, *,
+                 device: str | None = None) -> bool:
+    """The fused-epilogue stage's cost model (``fused="auto"``).
+
+    The fused megakernel (``repro.kernels.gee_fused``) replaces the
+    staged scatter + epilogue of the ``pallas`` backend, eliminating one
+    full [N, K] materialization -- it pays off exactly when (a) the
+    backend is ``pallas``, (b) there is an epilogue to fuse (diag-aug or
+    correlation; with neither the fused kernel degenerates to the staged
+    scatter), and (c) the device is a real TPU (off-TPU both paths run in
+    interpret mode and fusion saves nothing).  ``REPRO_GEE_FUSED=1/0``
+    overrides (b) and (c) but never (a): the fused stage only exists on
+    the Pallas path, so the override is a no-op for other backends.
+    """
+    if backend != "pallas":
+        return False
+    from repro.kernels.gee_fused import fused_override  # deferred: keep light
+
+    override = fused_override()
+    if override is not None:
+        return bool(override)
+    device = device or jax.default_backend()
+    return device == "tpu" and bool(opts.diag_aug or opts.correlation)
+
+
 # ---------------------------------------------------------------------------
 # GEEPlan: resolved stages + executor
 # ---------------------------------------------------------------------------
@@ -379,13 +404,14 @@ class GEEPlan:
     backend: str                      # resolved; never "auto"
     chunk_edges: Optional[int] = None
     impl: str = "auto"                # epilogue row-norm impl
+    fused: bool = False               # pallas-only: fused-epilogue megakernel
 
     @staticmethod
     def build(graph: PreparedGraph | EdgeList, num_classes: int,
               opts: GEEOptions = GEEOptions(), *, backend: str = "auto",
               device: str | None = None, chunk_edges: int | None = None,
-              budget_bytes: int | None = None,
-              impl: str = "auto") -> "GEEPlan":
+              budget_bytes: int | None = None, impl: str = "auto",
+              fused: "bool | str" = "auto") -> "GEEPlan":
         prepared = PreparedGraph.wrap(graph)
         if backend == "auto":
             backend = select_backend(prepared, num_classes, device=device,
@@ -395,9 +421,11 @@ class GEEPlan:
                 f"unknown backend {backend!r}; known: {KNOWN_BACKENDS} "
                 f"(+ 'auto'; 'distributed' needs an explicit mesh -- use "
                 f"GEEEmbedder, or 'streamed_sharded' for the default mesh)")
+        if fused == "auto":
+            fused = select_fused(backend, opts, device=device)
         return GEEPlan(prepared=prepared, num_classes=int(num_classes),
                        opts=opts, backend=backend, chunk_edges=chunk_edges,
-                       impl=impl)
+                       impl=impl, fused=bool(fused) and backend == "pallas")
 
     # -- introspection -------------------------------------------------------
     @property
@@ -412,12 +440,21 @@ class GEEPlan:
             out.append(PlanStage("compute", "segment_scatter",
                                  detail="flat segment-sum, O(E)"))
         elif self.backend == "pallas":
+            # fused packs the *base* graph (diag-aug folds in as deg+1 +
+            # the in-kernel addend); staged packs the augmented graph
+            packed_aug = o.diag_aug and not self.fused
             out.append(PlanStage(
                 "prep", "bucketed_ell",
-                cached=p.is_cached(("bucketed_ell", o.diag_aug)),
+                cached=p.is_cached(("bucketed_ell", packed_aug)),
                 detail="degree-bucketed ELL packing (host, O(E))"))
-            out.append(PlanStage("compute", "gee_spmm",
-                                 detail="MXU one-hot contraction per bucket"))
+            if self.fused:
+                out.append(PlanStage(
+                    "compute", "gee_spmm_fused",
+                    detail="scatter + diag-aug + row-norm fused in VMEM"))
+            else:
+                out.append(PlanStage(
+                    "compute", "gee_spmm",
+                    detail="MXU one-hot contraction per bucket"))
         elif self.backend == "chunked":
             from repro.graph.io import DEFAULT_CHUNK_EDGES
 
@@ -449,17 +486,19 @@ class GEEPlan:
                                  cached=p.is_cached(("host",)),
                                  detail="valid-prefix numpy triple"))
             out.append(PlanStage("compute", self.backend))
-        if o.correlation and self.backend not in ("chunked",
-                                                  "streamed_sharded",
-                                                  "dense_jax", "scipy",
-                                                  "python_loop"):
+        if o.correlation and not self.fused \
+                and self.backend not in ("chunked", "streamed_sharded",
+                                         "dense_jax", "scipy",
+                                         "python_loop"):
             out.append(PlanStage("epilogue", "row_l2_normalize",
                                  detail=f"impl={self.impl}"))
         return tuple(out)
 
     def describe(self) -> str:
         """One line per stage, e.g. for ``--plan`` CLI output."""
-        head = (f"GEEPlan(backend={self.backend}, opts={self.opts.tag()}, "
+        head = (f"GEEPlan(backend={self.backend}"
+                + (", fused" if self.fused else "")
+                + f", opts={self.opts.tag()}, "
                 f"N={self.prepared.num_nodes}, "
                 f"E={self.prepared.num_edges}, K={self.num_classes})")
         lines = [head] + [
@@ -481,6 +520,13 @@ class GEEPlan:
                 z = epilogue.row_l2_normalize(z, impl=self.impl)
             return z
         if self.backend == "pallas":
+            if self.fused:
+                from repro.kernels.gee_fused import gee_fused_from_bucketed
+
+                # base-graph packing: diag-aug folds in as deg+1 + the
+                # in-kernel addend, so the augmented packing never builds
+                return gee_fused_from_bucketed(
+                    p.bucketed_ell(False), jnp.asarray(labels), k, o)
             from repro.kernels.ops import gee_pallas_from_bucketed
 
             bell = p.bucketed_ell(o.diag_aug)
@@ -552,6 +598,6 @@ def sweep_options(graph: PreparedGraph | EdgeList, labels, num_classes: int,
 Graph = Union[PreparedGraph, EdgeList]
 
 __all__ = ["PreparedGraph", "GEEPlan", "PlanStage", "select_backend",
-           "sweep_options", "estimate_working_set_bytes",
+           "select_fused", "sweep_options", "estimate_working_set_bytes",
            "memory_budget_bytes", "KNOWN_BACKENDS", "ENV_MEMORY_BUDGET",
            "DEFAULT_MEMORY_BUDGET", "PALLAS_MAX_CLASSES"]

@@ -38,9 +38,48 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Callable, Dict, Tuple
+import time
+from typing import Callable, Dict, Iterable, Tuple
 
 ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
+ENV_MEASURE = "REPRO_AUTOTUNE_MEASURE"
+
+
+def measure_enabled() -> bool:
+    """True when ``REPRO_AUTOTUNE_MEASURE`` opts in to on-device measured
+    search.  Off by default so CI and cold runs behave identically to the
+    seeded-table/formula resolution."""
+    return os.environ.get(ENV_MEASURE, "") not in ("", "0", "false", "False")
+
+
+def _block_ready(x) -> None:
+    """Wait for device work to finish (the timing barrier)."""
+    try:
+        import jax
+        jax.block_until_ready(x)
+    except ImportError:                       # registry stays jax-optional
+        if hasattr(x, "block_until_ready"):
+            x.block_until_ready()
+
+
+def measure_runtime(fn: Callable[[], object], *, warmup: int = 1,
+                    repeats: int = 3) -> float:
+    """min-of-N wall time of ``fn()`` with a compile/cache warmup.
+
+    The warmup runs (at least one) absorb jit tracing and autotune-cache
+    population so the timed repeats see steady state; min-of-N then
+    discards scheduler noise -- together these make repeated searches
+    reproducible enough to gate on (see ``AutotuneRegistry.measured_search``,
+    which additionally never re-times a key it has already recorded).
+    """
+    for _ in range(max(int(warmup), 1)):
+        _block_ready(fn())
+    best = float("inf")
+    for _ in range(max(int(repeats), 1)):
+        t0 = time.perf_counter()
+        _block_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 Key = Tuple[int, ...]
 Value = Tuple[int, ...]
@@ -128,6 +167,52 @@ class AutotuneRegistry:
         value = tuple(int(v) for v in value)
         self._recorded.setdefault(kernel, {})[key] = value
         self._memo[(kernel, key)] = value
+
+    def measured_search(self, kernel: str, key: Key,
+                        candidates: Iterable[Value],
+                        runner: Callable[[Value], object], *,
+                        warmup: int = 1, repeats: int = 3,
+                        persist: bool = True
+                        ) -> Tuple[Value, Dict[Value, float]]:
+        """Time candidate block shapes on-device and record the winner.
+
+        ``runner(candidate)`` launches the kernel with that shape; each
+        unique candidate is timed via :func:`measure_runtime` (warmup +
+        min-of-N).  The argmin is recorded into the registry's measured
+        tier -- from then on it wins every ``lookup`` -- and flushed to
+        the ``REPRO_AUTOTUNE_CACHE`` file when ``persist`` (no-op if the
+        env var is unset).
+
+        Determinism contract: a key that is *already recorded* (from a
+        prior call or a loaded cache file) returns immediately without
+        timing anything, so a fixed cache file makes repeated runs
+        byte-identical; ties in the timings break toward the earliest
+        candidate in the given order.
+
+        Returns ``(winner, {candidate: seconds})`` -- timings empty on a
+        recorded-tier hit.
+        """
+        self._maybe_load_env()
+        key = tuple(int(k) for k in key)
+        hit = self._recorded.get(kernel, {}).get(key)
+        if hit is not None:
+            return hit, {}
+        cands: list[Value] = []
+        for c in candidates:
+            c = tuple(int(v) for v in c)
+            if c not in cands:
+                cands.append(c)
+        if not cands:
+            raise ValueError("measured_search needs at least one candidate")
+        timings = {
+            c: measure_runtime(lambda c=c: runner(c), warmup=warmup,
+                               repeats=repeats)
+            for c in cands}
+        winner = min(cands, key=timings.__getitem__)   # stable: first argmin
+        self.record(kernel, key, winner)
+        if persist:
+            self.save()                                # no-op without env path
+        return winner, timings
 
     def recorded(self, kernel: str | None = None) -> dict:
         """The persistable (measured) entries, for inspection/tests."""
@@ -218,4 +303,5 @@ class AutotuneRegistry:
 REGISTRY = AutotuneRegistry()
 
 __all__ = ["AutotuneRegistry", "REGISTRY", "ceil_to", "pow2_at_least",
-           "pow2_bucket", "ENV_CACHE_PATH"]
+           "pow2_bucket", "ENV_CACHE_PATH", "ENV_MEASURE", "measure_enabled",
+           "measure_runtime"]

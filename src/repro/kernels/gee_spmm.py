@@ -32,8 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.autotune import (REGISTRY, ceil_to, pow2_at_least,
-                                    pow2_bucket)
+from repro.kernels.autotune import (REGISTRY, ceil_to, measure_enabled,
+                                    pow2_at_least, pow2_bucket)
 
 LANE = 128          # TPU lane width: last-dim alignment unit
 SUBLANE = 8         # f32 sublane height
@@ -79,9 +79,17 @@ def choose_block_sizes(n: int, max_degree: int,
     stays within a handful of cache entries): recorded measurements win,
     then the seeded table, then the VMEM-budget formula.  The result is
     clamped so tiles never exceed the actual (padded) plane.
+
+    With ``REPRO_AUTOTUNE_MEASURE=1``, an unrecorded key first runs the
+    on-device measured search (:func:`measured_block_search`); the winner
+    lands in the registry's recorded tier (and the
+    ``REPRO_AUTOTUNE_CACHE`` file, if set), so it is timed exactly once
+    per key per cache lifetime.
     """
-    block_rows, block_deg, deg_sub = REGISTRY.lookup(
-        KERNEL_NAME, pow2_bucket(n, max_degree, num_classes))
+    key = pow2_bucket(n, max_degree, num_classes)
+    if measure_enabled() and key not in REGISTRY.recorded(KERNEL_NAME):
+        measured_block_search(n, max_degree, num_classes)
+    block_rows, block_deg, deg_sub = REGISTRY.lookup(KERNEL_NAME, key)
     block_rows = min(block_rows, ceil_to(max(n, 1), SUBLANE))
     block_deg = min(block_deg, ceil_to(max(max_degree, 1), SUBLANE))
     deg_sub = min(deg_sub, block_deg)
@@ -111,6 +119,90 @@ def _choose_block_sizes_bucketed(n_b: int, d_b: int,
     """Deprecated: resolve through ``repro.kernels.autotune.REGISTRY``
     (kept so external callers of the old private name keep working)."""
     return REGISTRY.lookup(KERNEL_NAME, (n_b, d_b, k_b))
+
+
+# ---------------------------------------------------------------------------
+# on-device measured search (opt-in via REPRO_AUTOTUNE_MEASURE=1)
+# ---------------------------------------------------------------------------
+
+# the candidate ladder the measured search sweeps, before clamping
+_CANDIDATE_LADDER = ((64, 64, 8), (128, 128, 8), (256, 64, 16),
+                     (256, 128, 16), (512, 128, 16), (128, 256, 32))
+
+# synthetic operand caps: candidates rank the same on an 8k-row slice of a
+# huge bucket, and timing 7 shapes on the full plane would dwarf the run
+# the tuning is meant to speed up
+_MEASURE_MAX_ROWS = 8192
+_MEASURE_MAX_DEG = 1024
+
+
+def candidate_blocks(key: tuple[int, ...],
+                     registry=REGISTRY, kernel: str = None
+                     ) -> list[tuple[int, int, int]]:
+    """The measured search's candidate set for one pow2-bucketed key:
+    the current registry resolution first (so a recorded winner can only
+    beat or match what seeded table/formula would have picked), the
+    formula, then the ladder -- all clamped to the bucketed plane and
+    deduplicated preserving order (ties break toward the front)."""
+    n_b, d_b, k_b = key
+    raw = [tuple(registry.lookup(kernel or KERNEL_NAME, key)),
+           _block_sizes_formula(key)]
+    raw += list(_CANDIDATE_LADDER)
+    out: list[tuple[int, int, int]] = []
+    for br, bd, ds in raw:
+        br = min(br, ceil_to(max(n_b, 1), SUBLANE))
+        bd = min(bd, ceil_to(max(d_b, 1), SUBLANE))
+        c = (br, bd, min(ds, bd))
+        if c not in out:
+            out.append(c)
+    return out
+
+
+def _synthetic_planes(n_b: int, d_b: int, k_b: int):
+    """Deterministic (ylab, contrib) planes shaped like one bucket: every
+    slot live with a rotating class label, so the kernel does full work
+    (an all-padding plane would time the skip path, not the contraction)."""
+    import numpy as np
+
+    rows = min(n_b, _MEASURE_MAX_ROWS)
+    deg = min(d_b, _MEASURE_MAX_DEG)
+    lab = (np.arange(rows * deg, dtype=np.int64) * 7919) % max(k_b, 1)
+    ylab = jnp.asarray(lab.reshape(rows, deg), jnp.int32)
+    contrib = jnp.ones((rows, deg), jnp.float32)
+    return ylab, contrib
+
+
+def _spmm_measure_runner(ylab, contrib, num_classes, interpret):
+    def run(cand):
+        br, bd, ds = cand
+        return gee_spmm(ylab, contrib, num_classes, block_rows=br,
+                        block_deg=bd, deg_sub=ds, interpret=interpret)
+    return run
+
+
+def measured_block_search(n: int, max_degree: int, num_classes: int, *,
+                          kernel: str = KERNEL_NAME,
+                          runner_factory=_spmm_measure_runner,
+                          registry=REGISTRY, warmup: int = 1,
+                          repeats: int = 3, interpret: bool | None = None):
+    """Time the candidate block shapes on synthetic planes of this key's
+    bucketed shape and record the winner in ``registry``.
+
+    Returns ``(winner, {candidate: seconds})``; a key already in the
+    recorded tier returns instantly with empty timings (the determinism
+    contract of ``AutotuneRegistry.measured_search``).  ``kernel`` /
+    ``runner_factory`` let the fused kernel reuse the same sweep with its
+    own launch.
+    """
+    key = pow2_bucket(n, max_degree, num_classes)
+    n_b, d_b, k_b = key
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    cands = candidate_blocks(key, registry=registry, kernel=kernel)
+    ylab, contrib = _synthetic_planes(n_b, d_b, k_b)
+    runner = runner_factory(ylab, contrib, k_b, interpret)
+    return registry.measured_search(kernel, key, cands, runner,
+                                    warmup=warmup, repeats=repeats)
 
 
 def _gee_spmm_kernel(ylab_ref, contrib_ref, out_ref, *, num_classes_pad: int,

@@ -327,6 +327,253 @@ def _gathered_pallas(queries, cand, mask, metric, block_q, block_m,
     return out[:q, :m]
 
 
+# ---------------------------------------------------------------------------
+# fused score-and-top-k (scores never materialize as a [Q, M] matrix)
+# ---------------------------------------------------------------------------
+#
+# The staged serving path computes the full [Q, M] score matrix, writes it
+# out, then reads it back for ``masked_topk``.  The fused kernels below keep
+# a [Q_tile, k_slots] running top-k (scores + ids) in the revisited output
+# block instead: each m-tile's scores merge into it via ``lax.top_k`` over
+# the k_slots + block_m concatenation, so nothing M-sized ever leaves VMEM.
+#
+# Tie behavior matches ``masked_topk`` exactly: the running entries come
+# first in the concatenation and always carry smaller global m than the
+# current tile (tiles arrive in ascending m), and ``lax.top_k`` is stable,
+# so equal scores keep ascending-m order -- the same order a full-row
+# ``top_k`` produces.  The pure-JAX fallback *is* the staged compose
+# (scores + masked_topk), so CPU/CI results are identical by construction.
+
+
+def fused_topk_enabled(impl: str = "auto") -> bool:
+    """Whether the serving path should route through the fused kernels:
+    ``REPRO_GEE_FUSED`` wins when set; otherwise fused iff the resolved
+    impl is ``pallas`` (i.e. a real TPU under ``auto``)."""
+    from repro.kernels.gee_fused import fused_override  # deferred: no cycle
+
+    override = fused_override()
+    if override is not None:
+        return bool(override)
+    return _resolve_impl(impl) == "pallas"
+
+
+def _k_slots(k: int, m: int) -> tuple[int, int]:
+    """(kk, k_slots): live result width and its lane-padded kernel width."""
+    kk = max(min(int(k), int(m)), 1)
+    return kk, ceil_to(kk, LANE)
+
+
+def _finalize_topk(scores, ids, q: int, kk: int, k: int):
+    """Slice kernel output to [Q, kk], apply the masked-slot convention
+    (id -1 at NEG_INF scores), pad to k -- ``masked_topk``'s contract."""
+    scores = scores[:q, :kk]
+    ids = jnp.where(scores > NEG_INF / 2, ids[:q, :kk].astype(jnp.int32), -1)
+    if kk < k:
+        ids = jnp.concatenate(
+            [ids, jnp.full((q, k - kk), -1, jnp.int32)], axis=1)
+        scores = jnp.concatenate(
+            [scores, jnp.full((q, k - kk), NEG_INF, jnp.float32)], axis=1)
+    return ids, scores
+
+
+def _pairwise_topk_kernel(q_ref, x_ref, valid_ref, scores_ref, ids_ref, *,
+                          metric: str, block_m: int, k_slots: int):
+    """One (q_tile, m_tile) step: score the tile, merge into the running
+    top-k held in the revisited output blocks."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        scores_ref[...] = jnp.full_like(scores_ref, NEG_INF)
+        ids_ref[...] = jnp.full_like(ids_ref, -1)
+
+    q = q_ref[...]                               # [BQ, K_pad] f32
+    x = x_ref[...]                               # [BM, K_pad] f32
+    v = valid_ref[...]                           # [1, BM] f32
+    dot = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    qn2 = jnp.sum(q * q, axis=1, keepdims=True)
+    xn2 = jnp.sum(x * x, axis=1)[None, :]
+    s = jnp.where(v > 0, _scores_from_parts(dot, qn2, xn2, metric), NEG_INF)
+    tile_ids = j * block_m + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    # running entries first: stable top_k keeps ascending-m tie order
+    merged_s = jnp.concatenate([scores_ref[...], s], axis=1)
+    merged_i = jnp.concatenate([ids_ref[...], tile_ids], axis=1)
+    top, pos = jax.lax.top_k(merged_s, k_slots)
+    scores_ref[...] = top
+    ids_ref[...] = jnp.take_along_axis(merged_i, pos, axis=1)
+
+
+def _gathered_topk_kernel(cand_ref, q_ref, mask_ref, ids_ref, scores_out_ref,
+                          ids_out_ref, *, metric: str, k_slots: int):
+    """Gathered-candidate twin: per-query candidate tiles carry their own
+    database ids (the IVF table gather), merged the same way."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        scores_out_ref[...] = jnp.full_like(scores_out_ref, NEG_INF)
+        ids_out_ref[...] = jnp.full_like(ids_out_ref, -1)
+
+    cand = cand_ref[...]                         # [BQ, BM, K_pad] f32
+    q = q_ref[...]                               # [BQ, K_pad] f32
+    m = mask_ref[...]                            # [BQ, BM] f32
+    tile_ids = ids_ref[...]                      # [BQ, BM] int32
+    dot = jax.lax.dot_general(cand, q, (((2,), (1,)), ((0,), (0,))),
+                              preferred_element_type=jnp.float32)
+    qn2 = jnp.sum(q * q, axis=1, keepdims=True)
+    cn2 = jnp.sum(cand * cand, axis=2)
+    s = jnp.where(m > 0, _scores_from_parts(dot, qn2, cn2, metric), NEG_INF)
+    merged_s = jnp.concatenate([scores_out_ref[...], s], axis=1)
+    merged_i = jnp.concatenate([ids_out_ref[...], tile_ids], axis=1)
+    top, pos = jax.lax.top_k(merged_s, k_slots)
+    scores_out_ref[...] = top
+    ids_out_ref[...] = jnp.take_along_axis(merged_i, pos, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
+                                             "block_m", "interpret"))
+def _pairwise_topk_pallas(queries, database, valid, k, metric, block_q,
+                          block_m, interpret):
+    q, kdim = queries.shape
+    m = database.shape[0]
+    kk, k_slots = _k_slots(k, m)
+    k_pad = _ceil_to(max(kdim, 1), LANE)
+    q_pad = _ceil_to(max(q, 1), block_q)
+    m_pad = _ceil_to(max(m, 1), block_m)
+    qp = jnp.zeros((q_pad, k_pad), jnp.float32)
+    qp = qp.at[:q, :kdim].set(queries.astype(jnp.float32))
+    xp = jnp.zeros((m_pad, k_pad), jnp.float32)
+    xp = xp.at[:m, :kdim].set(database.astype(jnp.float32))
+    vp = jnp.zeros((1, m_pad), jnp.float32)
+    vp = vp.at[0, :m].set(valid.astype(jnp.float32))
+    scores, ids = pl.pallas_call(
+        functools.partial(_pairwise_topk_kernel, metric=metric,
+                          block_m=block_m, k_slots=k_slots),
+        grid=(q_pad // block_q, m_pad // block_m),
+        in_specs=[
+            pl.BlockSpec((block_q, k_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, k_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_m), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k_slots), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k_slots), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q_pad, k_slots), jnp.float32),
+            jax.ShapeDtypeStruct((q_pad, k_slots), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, xp, vp)
+    return _finalize_topk(scores, ids, q, kk, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
+                                             "block_m", "interpret"))
+def _gathered_topk_pallas(queries, cand, mask, ids, k, metric, block_q,
+                          block_m, interpret):
+    q, m, kdim = cand.shape
+    kk, k_slots = _k_slots(k, m)
+    k_pad = _ceil_to(max(kdim, 1), LANE)
+    q_pad = _ceil_to(max(q, 1), block_q)
+    m_pad = _ceil_to(max(m, 1), block_m)
+    cp = jnp.zeros((q_pad, m_pad, k_pad), jnp.float32)
+    cp = cp.at[:q, :m, :kdim].set(cand.astype(jnp.float32))
+    qp = jnp.zeros((q_pad, k_pad), jnp.float32)
+    qp = qp.at[:q, :kdim].set(queries.astype(jnp.float32))
+    mp = jnp.zeros((q_pad, m_pad), jnp.float32)
+    mp = mp.at[:q, :m].set(mask.astype(jnp.float32))
+    ip = jnp.full((q_pad, m_pad), -1, jnp.int32)
+    ip = ip.at[:q, :m].set(ids.astype(jnp.int32))
+    scores, out_ids = pl.pallas_call(
+        functools.partial(_gathered_topk_kernel, metric=metric,
+                          k_slots=k_slots),
+        grid=(q_pad // block_q, m_pad // block_m),
+        in_specs=[
+            pl.BlockSpec((block_q, block_m, k_pad), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_q, k_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, block_m), lambda i, j: (i, j)),
+            pl.BlockSpec((block_q, block_m), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k_slots), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k_slots), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q_pad, k_slots), jnp.float32),
+            jax.ShapeDtypeStruct((q_pad, k_slots), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cp, qp, mp, ip)
+    return _finalize_topk(scores, out_ids, q, kk, k)
+
+
+def scored_topk(queries: jax.Array, database: jax.Array,
+                valid: jax.Array | None, k: int, *, metric: str = "l2",
+                impl: str = "auto", fused: bool | None = None,
+                block_q: int | None = None, block_m: int | None = None,
+                interpret: bool | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Top-``k`` of ``queries`` [Q, K] against a shared ``database``
+    [M, K]: exactly ``masked_topk(pairwise_scores(...), None, k)``, with
+    the [Q, M] score matrix never materialized when the fused kernel
+    runs.  ``fused=None`` resolves via :func:`fused_topk_enabled`; the
+    fused route needs the pallas impl (pure-JAX callers get the staged
+    compose, which is the fallback's definition of correct)."""
+    _check_metric(metric)
+    resolved = _resolve_impl(impl)
+    if fused is None:
+        fused = fused_topk_enabled(impl)
+    if fused and resolved == "pallas":
+        q, m = queries.shape[0], database.shape[0]
+        if block_q is None or block_m is None:
+            auto = choose_pairwise_blocks(q, m, queries.shape[1])
+            block_q = auto[0] if block_q is None else block_q
+            block_m = auto[1] if block_m is None else block_m
+        if valid is None:
+            valid = jnp.ones((m,), jnp.float32)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return _pairwise_topk_pallas(queries, database, valid, int(k),
+                                     metric, block_q, block_m, interpret)
+    scores = pairwise_scores(queries, database, valid, metric=metric,
+                             impl=impl, block_q=block_q, block_m=block_m,
+                             interpret=interpret)
+    return masked_topk(scores, None, int(k))
+
+
+def scored_topk_gathered(queries: jax.Array, cand: jax.Array,
+                         mask: jax.Array, ids: jax.Array, k: int, *,
+                         metric: str = "l2", impl: str = "auto",
+                         fused: bool | None = None,
+                         block_q: int | None = None,
+                         block_m: int | None = None,
+                         interpret: bool | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Per-query-candidates twin of :func:`scored_topk` (the IVF path):
+    ``masked_topk(gathered_scores(...), ids, k)`` without the [Q, M]
+    intermediate on the fused route."""
+    _check_metric(metric)
+    resolved = _resolve_impl(impl)
+    if fused is None:
+        fused = fused_topk_enabled(impl)
+    if fused and resolved == "pallas":
+        q, m, kdim = cand.shape
+        if block_q is None or block_m is None:
+            auto = choose_gathered_blocks(q, m, kdim)
+            block_q = auto[0] if block_q is None else block_q
+            block_m = auto[1] if block_m is None else block_m
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return _gathered_topk_pallas(queries, cand, mask, ids, int(k),
+                                     metric, block_q, block_m, interpret)
+    scores = gathered_scores(queries, cand, mask, metric=metric, impl=impl,
+                             block_q=block_q, block_m=block_m,
+                             interpret=interpret)
+    return masked_topk(scores, ids, int(k))
+
+
 def masked_topk(scores: jax.Array, ids: jax.Array | None,
                 k: int) -> tuple[jax.Array, jax.Array]:
     """Top-k over the last axis of a masked score matrix.

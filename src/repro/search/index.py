@@ -42,8 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.topk_score import (gathered_scores, masked_topk,
-                                      pairwise_scores)
+from repro.kernels.topk_score import (fused_topk_enabled, pairwise_scores,
+                                      scored_topk, scored_topk_gathered)
 
 DEFAULT_PAD_MULTIPLE = 128
 
@@ -204,10 +204,14 @@ class ClassPartitionedIndex:
         self.stats["queries"] += int(queries.shape[0])
         p = self.nprobe if nprobe is None else int(nprobe)
         p = max(1, min(p, int(self._active.shape[0])))
+        # resolved per call (not inside the jitted body) so flipping
+        # REPRO_GEE_FUSED between calls re-routes without a stale trace
+        fused = fused_topk_enabled(self.impl)
         if brute_force:
             self.stats["brute_force_queries"] += int(queries.shape[0])
             ids, scores = _exact_search(queries, self._z, k=int(k),
-                                        metric=self.metric, impl=self.impl)
+                                        metric=self.metric, impl=self.impl,
+                                        fused=fused)
         else:
             self.stats["cells_probed"] += int(queries.shape[0]) * p
             self.stats["candidates_scored"] += (int(queries.shape[0]) * p
@@ -215,7 +219,8 @@ class ClassPartitionedIndex:
             ids, scores = _ivf_search(
                 queries, self._z, self._centroids,
                 jnp.asarray(self._active, jnp.float32), self._table_device(),
-                k=int(k), nprobe=p, metric=self.metric, impl=self.impl)
+                k=int(k), nprobe=p, metric=self.metric, impl=self.impl,
+                fused=fused)
         if squeeze:
             return ids[0], scores[0]
         return ids, scores
@@ -287,16 +292,22 @@ class ClassPartitionedIndex:
 # index instances with the same shapes/statics)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "metric", "impl"))
-def _exact_search(queries, z, *, k, metric, impl):
-    """Brute force: score all N rows, top-k.  The recall oracle."""
-    scores = pairwise_scores(queries, z, None, metric=metric, impl=impl)
-    return masked_topk(scores, None, k)
+@functools.partial(jax.jit, static_argnames=("k", "metric", "impl", "fused"))
+def _exact_search(queries, z, *, k, metric, impl, fused=False):
+    """Brute force: score all N rows, top-k.  The recall oracle.
+
+    ``fused=True`` routes through the fused score-and-top-k kernel
+    (``repro.kernels.topk_score.scored_topk``) so the [Q, N] score matrix
+    never materializes; staged otherwise -- identical results either way.
+    """
+    return scored_topk(queries, z, None, k, metric=metric, impl=impl,
+                       fused=fused)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "nprobe", "metric", "impl"))
+@functools.partial(jax.jit, static_argnames=("k", "nprobe", "metric", "impl",
+                                             "fused"))
 def _ivf_search(queries, z, centroids, active, table, *, k, nprobe, metric,
-                impl):
+                impl, fused=False):
     """Probe -> gather -> batched masked score -> top-k, one trace per
     (Q, nprobe, k, table shape) combination."""
     cscores = pairwise_scores(queries, centroids, active, metric=metric,
@@ -309,5 +320,5 @@ def _ivf_search(queries, z, centroids, active, table, *, k, nprobe, metric,
     # table rows are all -1 -- masked out below, never scored as real.
     cand = z[jnp.clip(ids, 0, z.shape[0] - 1)]                  # [Q, P*B, K]
     mask = (ids >= 0).astype(jnp.float32)
-    scores = gathered_scores(queries, cand, mask, metric=metric, impl=impl)
-    return masked_topk(scores, ids, k)
+    return scored_topk_gathered(queries, cand, mask, ids, k, metric=metric,
+                                impl=impl, fused=fused)

@@ -14,6 +14,8 @@ from repro.graph.containers import edge_list_from_numpy, symmetrize
 from repro.kernels import choose_block_sizes, gee_pallas, gee_spmm
 from repro.kernels.ref import gee_spmm_ref
 
+pytestmark = pytest.mark.pallas_interpret
+
 
 # ---------------------------------------------------------------------------
 # the acceptance criterion: gee(..., backend="pallas") == gee_sparse_jax

@@ -9,6 +9,8 @@ import pytest
 from repro.kernels import gee_pallas, gee_spmm, row_norm
 from repro.kernels.ref import gee_spmm_ref, row_norm_ref
 
+pytestmark = pytest.mark.pallas_interpret
+
 
 def _rand_ell(rng, n, d, k, dtype=np.float32, pad_frac=0.3):
     ylab = rng.integers(0, k, size=(n, d)).astype(np.int32)
