@@ -113,6 +113,25 @@ def _fused_vs_staged_cell(n: int, repeats: int) -> dict:
             "fused_speedup": t_staged / t_fused}
 
 
+def _tracer_overhead_cell(n: int, repeats: int) -> dict:
+    """The observability gate: disabled span instrumentation must cost
+    <= 2% of a full-option ``gee()`` fit.  Uses the deterministic
+    decomposition in ``repro.obs.trace.tracer_overhead_pct`` (span count
+    x measured null-span cost / fit time) rather than an A/B wall-clock
+    diff that CI scheduler jitter would drown."""
+    from repro.core.gee import GEEOptions
+    from repro.obs.trace import tracer_overhead_pct
+
+    s = sample_sbm(n, seed=0)
+    prep = PreparedGraph.wrap(s.edges)
+    labels, k = s.labels, s.num_classes
+    opts = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+    r = tracer_overhead_pct(lambda: _block(gee(prep, labels, k, opts)),
+                            repeats=repeats)
+    r["nodes"] = int(n)
+    return r
+
+
 def _autotune_roundtrip_smoke() -> bool:
     """Persistence smoke: recorded entries survive save -> fresh load.
 
@@ -136,7 +155,9 @@ def _autotune_roundtrip_smoke() -> bool:
 
 def run(nodes=NODE_GRID, repeats: int = 3, backend: str = "sparse_jax",
         min_speedup: float = 1.5, json_path: str | None = None,
-        min_fused_speedup: float = 1.2):
+        min_fused_speedup: float = 1.2,
+        max_tracer_overhead: float = 2.0,
+        metrics_path: str | None = None):
     cells = []
     for n in nodes:
         s = sample_sbm(n, seed=0)
@@ -178,6 +199,14 @@ def run(nodes=NODE_GRID, repeats: int = 3, backend: str = "sparse_jax",
           f"{fused_cell['fused_speedup']:5.2f}x"
           + ("" if on_tpu else "  [interpret mode: parity only, no gate]"))
 
+    overhead = _tracer_overhead_cell(min(max(nodes), 3_000), repeats)
+    print(f"disabled-tracer overhead (N={overhead['nodes']}): "
+          f"{overhead['span_count']} spans x "
+          f"{overhead['disabled_span_ns']:.0f} ns / "
+          f"{overhead['fn_s']*1e3:.1f} ms fit = "
+          f"{overhead['overhead_pct']:.4f}%  (gate <= "
+          f"{max_tracer_overhead}%)")
+
     roundtrip_ok = _autotune_roundtrip_smoke()
     print(f"autotune persistence round-trip: "
           f"{'ok' if roundtrip_ok else 'FAILED'}")
@@ -188,14 +217,25 @@ def run(nodes=NODE_GRID, repeats: int = 3, backend: str = "sparse_jax",
               "fused_speedup": fused_cell["fused_speedup"],
               "fused_gate_on": on_tpu,
               "min_fused_speedup": min_fused_speedup,
+              "tracer_overhead": overhead,
+              "tracer_overhead_pct": overhead["overhead_pct"],
+              "max_tracer_overhead": max_tracer_overhead,
               "autotune_roundtrip": roundtrip_ok}
     if json_path:
         with open(json_path, "w") as f:
             json.dump(result, f, indent=2)
         print(f"wrote {json_path}")
+    if metrics_path:
+        from repro.obs.metrics import get_registry
+
+        get_registry().write_json(metrics_path)
+        print(f"wrote {metrics_path}")
     assert roundtrip_ok, "autotune registry persistence round-trip failed"
     assert worst >= min_speedup, (
         f"prep reuse speedup {worst:.2f}x below the {min_speedup}x gate")
+    assert overhead["overhead_pct"] <= max_tracer_overhead, (
+        f"disabled tracer overhead {overhead['overhead_pct']:.3f}% above "
+        f"the {max_tracer_overhead}% gate")
     if on_tpu:
         assert fused_cell["fused_speedup"] >= min_fused_speedup, (
             f"fused speedup {fused_cell['fused_speedup']:.2f}x below the "
@@ -212,11 +252,16 @@ def main(argv=None):
     ap.add_argument("--min-speedup", type=float, default=1.5)
     ap.add_argument("--min-fused-speedup", type=float, default=1.2,
                     help="fused-vs-staged gate, asserted only on TPU runs")
+    ap.add_argument("--max-tracer-overhead", type=float, default=2.0,
+                    help="disabled-instrumentation overhead gate, percent")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry snapshot JSON here")
     args = ap.parse_args(argv)
     return run(tuple(int(x) for x in args.nodes.split(",")),
                args.repeats, args.backend, args.min_speedup, args.json,
-               args.min_fused_speedup)
+               args.min_fused_speedup, args.max_tracer_overhead,
+               args.metrics_out)
 
 
 if __name__ == "__main__":

@@ -167,6 +167,8 @@ def main(argv=None):
     ap.add_argument("--min-recall", type=float, default=0.9,
                     help="fail if default-nprobe recall@k drops below this "
                          "on any graph (0 disables)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry snapshot JSON here")
     args = ap.parse_args(argv)
     nodes = tuple(int(x) for x in args.nodes.split(",") if x)
     rows, fused_cell = run(nodes, args.queries, args.k, args.repeats,
@@ -182,6 +184,11 @@ def main(argv=None):
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")
+    if args.metrics_out:
+        from repro.obs.metrics import get_registry
+
+        get_registry().write_json(args.metrics_out)
+        print(f"wrote {args.metrics_out}")
     if args.min_recall:
         worst = min(r["recall_at_k_default"] for r in rows)
         if worst < args.min_recall:

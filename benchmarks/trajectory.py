@@ -81,6 +81,8 @@ def _extract(payload: dict) -> dict:
     elif bench == "gee_plan":
         put("prep_reuse_speedup", payload.get("worst_speedup"), HIGHER)
         put("fused_speedup", payload.get("fused_speedup"), HIGHER)
+        put("tracer_overhead_pct", payload.get("tracer_overhead_pct"),
+            LOWER)
     elif bench == "gee_search":
         row = _last_row(payload)
         if row:

@@ -106,20 +106,26 @@ class CheckpointManager:
                                    shardings)
         return step, tree, extra
 
-    def restore_latest_arrays(self, verify: bool = True):
+    def restore_latest_arrays(self, verify: bool = True,
+                              skipped: list | None = None):
         """Newest checkpoint as a flat ``{leaf-path: array}`` dict, walking
         back past corrupt/partial snapshots (``verify=True`` rejects them
         via the manifest digest) to the newest *loadable* one.  Returns
         ``(step, arrays, extra)`` or ``(None, None, {})``.  This is the
         crash-recovery entry point: no ``like_tree`` needed, and a torn
         write of the newest snapshot costs one retention slot, not the
-        ability to recover."""
+        ability to recover.  Pass ``skipped=[]`` to collect the step
+        numbers that failed to load (the recovery timeline reports them --
+        a silently skipped snapshot is a retention slot an operator should
+        know about)."""
         for step in reversed(ckpt.available_steps(self.directory)):
             try:
                 arrays, extra = ckpt.restore_arrays(self.directory, step,
                                                     verify=verify)
                 return step, arrays, extra
             except (ValueError, OSError, json.JSONDecodeError):
+                if skipped is not None:
+                    skipped.append(step)
                 continue                       # fall back to the previous one
         return None, None, {}
 

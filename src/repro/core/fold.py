@@ -39,6 +39,7 @@ True
 
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import jax
@@ -49,6 +50,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.epilogue import apply_epilogue, finalize, inv_sqrt_degrees
 from repro.core.gee import GEEOptions, class_weight_inv
 from repro.distributed.compat import shard_map, shard_map_nocheck
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 LOCAL_BACKENDS = ("segment_sum", "pallas")
 
@@ -164,11 +167,22 @@ def stream_fold(source, labels, num_classes: int, opts: GEEOptions):
                          f"graph has {n}")
     winv = class_weight_inv(labels, k)
     und = source.undirected
+    tr = obs_trace.get_tracer()
+    traced = tr.enabled
+    t0 = time.perf_counter()
+    windows = edges_folded = 0
 
     if opts.laplacian:
         deg = jnp.zeros((n,), jnp.float32)
-        for w in source.windows():                           # pass 1
-            deg = fold_degrees(deg, w.src, w.dst, w.weight, undirected=und)
+        for i, w in enumerate(source.windows()):             # pass 1
+            with tr.span("fold.window", phase="degrees", idx=i,
+                         edges=int(w.num_edges)):
+                deg = fold_degrees(deg, w.src, w.dst, w.weight,
+                                   undirected=und)
+                if traced:       # async dispatch: sync for honest spans
+                    deg.block_until_ready()
+            windows += 1
+            edges_folded += int(w.num_edges)
         if opts.diag_aug:
             deg = deg + 1.0
         dinv = inv_sqrt_degrees(deg)
@@ -176,10 +190,32 @@ def stream_fold(source, labels, num_classes: int, opts: GEEOptions):
         dinv = jnp.ones((n,), jnp.float32)
 
     z = jnp.zeros((n * k,), jnp.float32)
-    for w in source.windows():                               # pass 2
-        z = fold_z(z, w.src, w.dst, w.weight, labels, winv, dinv,
-                   num_classes=k, undirected=und)
+    for i, w in enumerate(source.windows()):                 # pass 2
+        with tr.span("fold.window", phase="scatter", idx=i,
+                     edges=int(w.num_edges)):
+            z = fold_z(z, w.src, w.dst, w.weight, labels, winv, dinv,
+                       num_classes=k, undirected=und)
+            if traced:
+                z.block_until_ready()
+        windows += 1
+        edges_folded += int(w.num_edges)
+
+    _record_fold(windows, edges_folded, time.perf_counter() - t0)
     return z, winv, dinv
+
+
+def _record_fold(windows: int, edges: int, elapsed_s: float) -> None:
+    """Registry bookkeeping shared by the streaming folds: window/edge
+    counters plus the ``fold.edges_per_sec`` derived gauge.  Runs once
+    per fold (never per window), so the always-on cost is a few lock
+    acquisitions.  The rate is honest wall time under tracing (stage
+    syncs forced); untraced it includes async dispatch overlap.
+    """
+    reg = obs_metrics.get_registry()
+    reg.counter("fold.windows").inc(windows)
+    reg.counter("fold.edges").inc(edges)
+    if elapsed_s > 0 and edges:
+        reg.gauge("fold.edges_per_sec").set(edges / elapsed_s)
 
 
 # ---------------------------------------------------------------------------
@@ -348,13 +384,23 @@ def gee_streamed_sharded(source, labels, num_classes: int,
     winv = class_weight_inv(labels, k)
     und = source.undirected
     g = pad_nodes(source.window_edges, p)   # window split into P sub-windows
+    tr = obs_trace.get_tracer()
+    traced = tr.enabled
+    t0 = time.perf_counter()
+    windows = edges_folded = 0
 
     if opts.laplacian:
         deg_parts = jnp.zeros((p, n_pad), jnp.float32)
-        for w in source.windows(pad_to=g):                   # pass 1
-            deg_parts = _fold_degrees_sharded(
-                deg_parts, w.src, w.dst, w.weight,
-                mesh=mesh, axes=axes, undirected=und)
+        for i, w in enumerate(source.windows(pad_to=g)):     # pass 1
+            with tr.span("fold.window", phase="degrees", idx=i, shards=p,
+                         edges=int(w.num_edges)):
+                deg_parts = _fold_degrees_sharded(
+                    deg_parts, w.src, w.dst, w.weight,
+                    mesh=mesh, axes=axes, undirected=und)
+                if traced:
+                    deg_parts.block_until_ready()
+            windows += 1
+            edges_folded += int(w.num_edges)
         deg = deg_parts.sum(axis=0)
         if opts.diag_aug:
             deg = deg + 1.0
@@ -365,19 +411,36 @@ def gee_streamed_sharded(source, labels, num_classes: int,
     z_parts = jnp.zeros((p, n_pad * k), jnp.float32)
     if local_backend == "pallas":
         interpret = jax.default_backend() != "tpu"
-        for w in source.windows(pad_to=g):                   # pass 2
-            cols, vals = _window_plane(w, p, n_pad, und)
-            z_parts = _fold_plane_sharded(
-                z_parts, cols, vals, labels, winv, dinv,
-                mesh=mesh, axes=axes, num_classes=k, interpret=interpret)
+        for i, w in enumerate(source.windows(pad_to=g)):     # pass 2
+            with tr.span("fold.window", phase="scatter", idx=i, shards=p,
+                         edges=int(w.num_edges)):
+                cols, vals = _window_plane(w, p, n_pad, und)
+                z_parts = _fold_plane_sharded(
+                    z_parts, cols, vals, labels, winv, dinv,
+                    mesh=mesh, axes=axes, num_classes=k,
+                    interpret=interpret)
+                if traced:
+                    z_parts.block_until_ready()
+            windows += 1
+            edges_folded += int(w.num_edges)
     else:
-        for w in source.windows(pad_to=g):                   # pass 2
-            z_parts = _fold_z_sharded(
-                z_parts, w.src, w.dst, w.weight, labels, winv, dinv,
-                mesh=mesh, axes=axes, num_classes=k, undirected=und)
+        for i, w in enumerate(source.windows(pad_to=g)):     # pass 2
+            with tr.span("fold.window", phase="scatter", idx=i, shards=p,
+                         edges=int(w.num_edges)):
+                z_parts = _fold_z_sharded(
+                    z_parts, w.src, w.dst, w.weight, labels, winv, dinv,
+                    mesh=mesh, axes=axes, num_classes=k, undirected=und)
+                if traced:
+                    z_parts.block_until_ready()
+            windows += 1
+            edges_folded += int(w.num_edges)
 
-    z = _combine_sharded(z_parts, labels, winv, dinv, mesh=mesh, axes=axes,
-                         num_classes=k, opts=opts)
+    with tr.span("fold.combine", shards=p, n=n, k=k):
+        z = _combine_sharded(z_parts, labels, winv, dinv, mesh=mesh,
+                             axes=axes, num_classes=k, opts=opts)
+        if traced:
+            z.block_until_ready()
+    _record_fold(windows, edges_folded, time.perf_counter() - t0)
     return z[:n]
 
 

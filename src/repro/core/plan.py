@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import Dict, Iterable, Mapping, Optional, Tuple, Union
 
 import jax
@@ -58,6 +59,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import epilogue
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.core.gee import (ALL_OPTION_SETTINGS, GEEOptions, gee_dense_jax,
                             gee_python_loop, gee_scipy, gee_sparse_jax,
                             laplacian_edge_weights)
@@ -83,6 +86,23 @@ def _laplacian_fold(edges: EdgeList) -> EdgeList:
 
 
 _add_self_loops_jit = jax.jit(add_self_loops)
+
+
+def _block_tree(x):
+    """``jax.block_until_ready`` tolerant of host-only stage results
+    (chunk manifests, numpy triples): tracing-mode stage timings must not
+    crash on objects with nothing to wait for."""
+    try:
+        return jax.block_until_ready(x)
+    except Exception:
+        return x
+
+
+def _chunk_key(chunk_edges: int | None) -> int:
+    """The ``("chunked", ...)`` cache-key component for a window size."""
+    from repro.graph.io import DEFAULT_CHUNK_EDGES
+
+    return int(chunk_edges or DEFAULT_CHUNK_EDGES)
 
 
 # ---------------------------------------------------------------------------
@@ -405,6 +425,10 @@ class GEEPlan:
     chunk_edges: Optional[int] = None
     impl: str = "auto"                # epilogue row-norm impl
     fused: bool = False               # pallas-only: fused-epilogue megakernel
+    # per-stage wall times (ms) of the last *traced* execution; a mutable
+    # cell on a frozen plan -- excluded from eq/repr, never reassigned
+    _timings: dict = dataclasses.field(default_factory=dict, compare=False,
+                                       repr=False)
 
     @staticmethod
     def build(graph: PreparedGraph | EdgeList, num_classes: int,
@@ -494,30 +518,107 @@ class GEEPlan:
                                  detail=f"impl={self.impl}"))
         return tuple(out)
 
-    def describe(self) -> str:
-        """One line per stage, e.g. for ``--plan`` CLI output."""
+    def describe(self, timings: bool = False) -> str:
+        """One line per stage, e.g. for ``--plan`` CLI output.
+
+        ``timings=True`` appends each stage's wall time from the last
+        *traced* execution (run :meth:`execute` with the tracer enabled
+        first -- untraced executions skip the stage-boundary syncs that
+        make per-stage times honest, so they record nothing).
+        """
         head = (f"GEEPlan(backend={self.backend}"
                 + (", fused" if self.fused else "")
                 + f", opts={self.opts.tag()}, "
                 f"N={self.prepared.num_nodes}, "
                 f"E={self.prepared.num_edges}, K={self.num_classes})")
-        lines = [head] + [
-            f"  [{s.kind:8s}] {s.name}"
-            + (" (cached)" if s.cached else "")
-            + (f" -- {s.detail}" if s.detail else "")
-            for s in self.stages]
+        timed = self._timings if timings else {}
+        lines = [head]
+        for s in self.stages:
+            line = (f"  [{s.kind:8s}] {s.name}"
+                    + (" (cached)" if s.cached else "")
+                    + (f" -- {s.detail}" if s.detail else ""))
+            if s.name in timed:
+                line += f"  [{timed[s.name]:.2f} ms]"
+            lines.append(line)
+        if timings:
+            if "total_ms" in timed:
+                lines.append(f"  total {timed['total_ms']:.2f} ms "
+                             f"(stage syncs forced by tracing)")
+            else:
+                lines.append("  (no traced execution yet: enable the "
+                             "tracer, then execute())")
         return "\n".join(lines)
 
+    @property
+    def last_timings(self) -> dict:
+        """``{stage_name: ms, "total_ms": ms}`` from the last traced
+        execution (empty until one happens)."""
+        return dict(self._timings)
+
     # -- execution -----------------------------------------------------------
+    def _stage(self, kind: str, name: str, cached: bool, fn):
+        """Run one pipeline stage under a ``plan.stage.<name>`` span.
+
+        With the tracer disabled this is a plain call.  With it enabled,
+        the stage result is blocked-on before the span closes -- jax
+        dispatch is async, so without the sync every stage but the last
+        would bill its device time to whoever touches the value next.
+        """
+        tr = obs_trace.get_tracer()
+        if not tr.enabled:
+            return fn()
+        t0 = time.perf_counter()
+        with tr.span("plan.stage." + name, kind=kind, cached=cached):
+            out = _block_tree(fn())
+        self._timings[name] = (time.perf_counter() - t0) * 1e3
+        return out
+
     def execute(self, labels) -> jax.Array:
-        """Run the staged pipeline for one labels vector."""
+        """Run the staged pipeline for one labels vector.
+
+        With the global tracer enabled, every stage runs under a
+        ``plan.stage.*`` span (tagged with its prep-cache status) inside
+        one ``plan.execute`` root span, and per-stage wall times are kept
+        for :meth:`describe(timings=True) <describe>`.
+        """
+        tr = obs_trace.get_tracer()
+        if not tr.enabled:
+            return self._execute_stages(labels)
+        self._timings.clear()
+        p = self.prepared
+        hits0, misses0 = p._hits, p._misses
+        t0 = time.perf_counter()
+        with tr.span("plan.execute", backend=self.backend,
+                     n=p.num_nodes, e=p.num_edges, k=self.num_classes,
+                     opts=self.opts.tag(), fused=self.fused) as root:
+            z = _block_tree(self._execute_stages(labels))
+            root.tag(cache_hits=p._hits - hits0,
+                     cache_misses=p._misses - misses0)
+        total_ms = (time.perf_counter() - t0) * 1e3
+        self._timings["total_ms"] = total_ms
+        reg = obs_metrics.get_registry()
+        reg.counter("plan.executions").inc()
+        reg.counter("plan.cache_hits").inc(p._hits - hits0)
+        reg.counter("plan.cache_misses").inc(p._misses - misses0)
+        reg.histogram("plan.execute_ms").observe(total_ms)
+        return z
+
+    def _execute_stages(self, labels) -> jax.Array:
         k, o, p = self.num_classes, self.opts, self.prepared
         if self.backend == "sparse_jax":
-            eff = p.effective_edges(o)
+            eff = self._stage(
+                "prep", "effective_edges",
+                p.is_cached(("eff", o.diag_aug, o.laplacian)),
+                lambda: p.effective_edges(o))
             # prep already applied: the scatter runs with bare options
-            z = gee_sparse_jax(eff, jnp.asarray(labels), k, GEEOptions())
+            z = self._stage(
+                "compute", "segment_scatter", False,
+                lambda: gee_sparse_jax(eff, jnp.asarray(labels), k,
+                                       GEEOptions()))
             if o.correlation:
-                z = epilogue.row_l2_normalize(z, impl=self.impl)
+                z = self._stage(
+                    "epilogue", "row_l2_normalize", False,
+                    lambda: epilogue.row_l2_normalize(z, impl=self.impl))
             return z
         if self.backend == "pallas":
             if self.fused:
@@ -525,36 +626,70 @@ class GEEPlan:
 
                 # base-graph packing: diag-aug folds in as deg+1 + the
                 # in-kernel addend, so the augmented packing never builds
-                return gee_fused_from_bucketed(
-                    p.bucketed_ell(False), jnp.asarray(labels), k, o)
+                bell = self._stage(
+                    "prep", "bucketed_ell",
+                    p.is_cached(("bucketed_ell", False)),
+                    lambda: p.bucketed_ell(False))
+                return self._stage(
+                    "compute", "gee_spmm_fused", False,
+                    lambda: gee_fused_from_bucketed(
+                        bell, jnp.asarray(labels), k, o))
             from repro.kernels.ops import gee_pallas_from_bucketed
 
-            bell = p.bucketed_ell(o.diag_aug)
-            z = gee_pallas_from_bucketed(
-                bell, jnp.asarray(labels), k,
-                GEEOptions(laplacian=o.laplacian))
+            bell = self._stage(
+                "prep", "bucketed_ell",
+                p.is_cached(("bucketed_ell", o.diag_aug)),
+                lambda: p.bucketed_ell(o.diag_aug))
+            z = self._stage(
+                "compute", "gee_spmm", False,
+                lambda: gee_pallas_from_bucketed(
+                    bell, jnp.asarray(labels), k,
+                    GEEOptions(laplacian=o.laplacian)))
             if o.correlation:      # epilogue honors this plan's impl choice
-                z = epilogue.row_l2_normalize(z, impl=self.impl)
+                z = self._stage(
+                    "epilogue", "row_l2_normalize", False,
+                    lambda: epilogue.row_l2_normalize(z, impl=self.impl))
             return z
         if self.backend == "chunked":
             from repro.core.chunked import gee_chunked
 
-            return gee_chunked(p.chunked(self.chunk_edges), labels, k, o,
-                               impl=self.impl)
+            chunk = self.chunk_edges
+            manifest = self._stage(
+                "prep", "chunk_manifest",
+                p.is_cached(("chunked", _chunk_key(chunk))),
+                lambda: p.chunked(chunk))
+            return self._stage(
+                "compute", "two_pass_stream", False,
+                lambda: gee_chunked(manifest, labels, k, o, impl=self.impl))
         if self.backend == "streamed_sharded":
             from repro.core.fold import gee_streamed_sharded
 
+            chunk = self.chunk_edges
+            manifest = self._stage(
+                "prep", "chunk_manifest",
+                p.is_cached(("chunked", _chunk_key(chunk))),
+                lambda: p.chunked(chunk))
             # default mesh over all local devices; rows come back [:N]
-            return gee_streamed_sharded(p.chunked(self.chunk_edges),
-                                        labels, k, o)
+            return self._stage(
+                "compute", "window_shard_fold", False,
+                lambda: gee_streamed_sharded(manifest, labels, k, o))
         if self.backend == "dense_jax":
-            return gee_dense_jax(p.base, jnp.asarray(labels), k, o)
-        src, dst, w = p.host_arrays()
+            return self._stage(
+                "compute", "dense_matmul", False,
+                lambda: gee_dense_jax(p.base, jnp.asarray(labels), k, o))
+        src, dst, w = self._stage("prep", "host_arrays",
+                                  p.is_cached(("host",)), p.host_arrays)
         y = np.asarray(labels)
         if self.backend == "scipy":
-            return gee_scipy(src, dst, w, y, k, o, num_nodes=p.num_nodes)
+            return self._stage(
+                "compute", "scipy", False,
+                lambda: gee_scipy(src, dst, w, y, k, o,
+                                  num_nodes=p.num_nodes))
         assert self.backend == "python_loop"
-        return gee_python_loop(src, dst, w, y, k, o, num_nodes=p.num_nodes)
+        return self._stage(
+            "compute", "python_loop", False,
+            lambda: gee_python_loop(src, dst, w, y, k, o,
+                                    num_nodes=p.num_nodes))
 
 
 # ---------------------------------------------------------------------------

@@ -85,21 +85,26 @@ def shard_edges_to_ell(edges: EdgeList, num_shards: int, num_rows: int,
     packing is deterministic.
     """
     from repro.graph.ell import _group_edges_by_row
+    from repro.obs import trace as obs_trace
 
     del seed                      # deterministic rank-interleaved assignment
-    gs, gd, gw, counts, slot = _group_edges_by_row(edges, None)
-    need = max(1, -(-int(counts.max(initial=0)) // num_shards))
-    if width is None:
-        width = need
-    elif width < need:
-        raise ValueError(f"width {width} cannot hold the densest row: "
-                         f"need {need} (= ceil(max_degree / num_shards))")
+    with obs_trace.span("pack.shard_ell", shards=num_shards, rows=num_rows,
+                        edges=edges.num_edges) as sp:
+        gs, gd, gw, counts, slot = _group_edges_by_row(edges, None)
+        need = max(1, -(-int(counts.max(initial=0)) // num_shards))
+        if width is None:
+            width = need
+        elif width < need:
+            raise ValueError(f"width {width} cannot hold the densest row: "
+                             f"need {need} "
+                             f"(= ceil(max_degree / num_shards))")
+        sp.tag(width=int(width))
 
-    shard = slot % num_shards
-    sslot = slot // num_shards
-    cols = np.zeros((num_shards, num_rows, width), np.int32)
-    vals = np.zeros((num_shards, num_rows, width), np.float32)
-    cols[shard, gs, sslot] = gd
-    vals[shard, gs, sslot] = gw
-    return (jnp.asarray(cols.reshape(num_shards * num_rows, width)),
-            jnp.asarray(vals.reshape(num_shards * num_rows, width)))
+        shard = slot % num_shards
+        sslot = slot // num_shards
+        cols = np.zeros((num_shards, num_rows, width), np.int32)
+        vals = np.zeros((num_shards, num_rows, width), np.float32)
+        cols[shard, gs, sslot] = gd
+        vals[shard, gs, sslot] = gw
+        return (jnp.asarray(cols.reshape(num_shards * num_rows, width)),
+                jnp.asarray(vals.reshape(num_shards * num_rows, width)))

@@ -19,6 +19,7 @@ from repro.core.gee import GEEOptions, gee
 from repro.core.plan import GEEPlan, PreparedGraph
 from repro.graph.datasets import TABLE2, load
 from repro.graph.sbm import sample_sbm
+from repro.obs import cli as obs_cli
 
 
 def _time(fn, repeats=3):
@@ -62,7 +63,9 @@ def main(argv=None):
     ap.add_argument("--plan", action="store_true",
                     help="print the resolved GEEPlan stages per backend")
     ap.add_argument("--seed", type=int, default=0)
+    obs_cli.add_flags(ap)
     args = ap.parse_args(argv)
+    obs_cli.setup(args)
 
     opts = GEEOptions(laplacian=args.lap, diag_aug=args.diag,
                       correlation=args.cor)
@@ -120,6 +123,7 @@ def main(argv=None):
                   f"{eps/1e6:8.2f} M edges/s"
                   f"   Z[{z.shape[0]}x{z.shape[1]}] "
                   f"norm {np.linalg.norm(z):.4f}")
+        obs_cli.finish(args)
         return
 
     if args.sbm:
@@ -149,21 +153,31 @@ def main(argv=None):
             print(f"  {b:12s}: skipped (interpret mode off-TPU; "
                   f"run with --backend pallas to force)")
             continue
+        plan = None
         if args.plan:
             plan = GEEPlan.build(prep, k, opts, backend=b,
                                  chunk_edges=args.chunk_edges)
-            print("\n".join("  " + ln for ln in
-                            plan.describe().splitlines()))
+            if not args.trace:
+                print("\n".join("  " + ln for ln in
+                                plan.describe().splitlines()))
         if b == "chunked" and args.chunk_edges:
             from repro.core.chunked import gee_chunked
             fn = lambda: gee_chunked(prep.chunked(args.chunk_edges),
                                      labels, k, opts)
+        elif plan is not None:
+            # Execute through the printed plan so --trace populates its
+            # per-stage timings (describe(timings=True) below).
+            fn = lambda: plan.execute(labels)
         else:
             fn = lambda: gee(prep, labels, k, opts, backend=b)
         dt = _time(fn)
         z = np.asarray(fn())
         print(f"  {b:12s}: {dt*1e3:9.1f} ms   Z[{z.shape[0]}x{z.shape[1]}] "
               f"norm {np.linalg.norm(z):.4f}")
+        if plan is not None and args.trace:
+            print("\n".join("  " + ln for ln in
+                            plan.describe(timings=True).splitlines()))
+    obs_cli.finish(args)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ from repro.core.api import GEEEmbedder
 from repro.core.gee import GEEOptions
 from repro.graph.datasets import TABLE2, load
 from repro.graph.sbm import sample_sbm
+from repro.obs import cli as obs_cli
 from repro.search.service import GEEQueryService
 
 
@@ -78,7 +79,9 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", type=str, default="",
                     help="also write a JSON report here")
+    obs_cli.add_flags(ap)
     args = ap.parse_args(argv)
+    obs_cli.setup(args)
 
     opts = GEEOptions(laplacian=args.lap, diag_aug=args.diag,
                       correlation=args.cor)
@@ -163,6 +166,7 @@ def main(argv=None):
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)
         print(f"  wrote {args.json}")
+    obs_cli.finish(args)
     return report
 
 

@@ -38,6 +38,7 @@ from repro.graph.datasets import TABLE2, load
 from repro.graph.delta import (edge_delta_from_numpy, label_delta_from_numpy,
                                symmetrize_delta)
 from repro.graph.sbm import sample_sbm
+from repro.obs import cli as obs_cli
 from repro.search.service import GEEDeltaServer
 
 
@@ -107,9 +108,11 @@ def main(argv=None):
     ap.add_argument("--recover", action="store_true",
                     help="resume from the newest snapshot in --snapshot-dir "
                          "(+ WAL replay) instead of starting fresh")
+    obs_cli.add_flags(ap)
     args = ap.parse_args(argv)
     if args.recover and not args.snapshot_dir:
         ap.error("--recover requires --snapshot-dir")
+    obs_cli.setup(args)
 
     st = prepare_stream(args)
     name, edges, labels, k, opts = (st["name"], st["edges"], st["labels"],
@@ -143,6 +146,9 @@ def main(argv=None):
               f"{rec.replayed_deltas} replayed deltas in "
               f"{(time.perf_counter()-t0)*1e3:.1f} ms; "
               f"resuming at batch {start_batch}/{n_batches}")
+        if args.trace:
+            for ev in rec.timeline:
+                print(f"    recovery: {ev}")
         # Replay the RNG draws the applied batches consumed, so the resumed
         # stream continues the exact sequence of the uninterrupted run.
         for _ in range(start_batch if n_labels else 0):
@@ -239,6 +245,7 @@ def main(argv=None):
               f"(max verify err {max_err:.2e})")
     print(f"  server stats: {server.stats}")
     print(f"  incremental stats: {inc.stats}")
+    obs_cli.finish(args)
     return {"update_ms_mean": float(ts.mean()),
             "recompute_ms": float(np.mean(recompute_ts)) * 1e3
             if recompute_ts else None,

@@ -1,0 +1,33 @@
+"""Observability: structured tracing + a metrics registry.
+
+Dependency-free (stdlib only; jax is an optional overlay).  See
+``docs/observability.md`` for the operator guide.
+"""
+
+from repro.obs.metrics import (
+    BoundedSeries,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    StatsView,
+    get_registry,
+    set_registry,
+)
+from repro.obs.trace import (
+    SpanEvent,
+    Tracer,
+    disable,
+    enable,
+    get_tracer,
+    set_tracer,
+    span,
+    tracer_overhead_pct,
+)
+
+__all__ = [
+    "BoundedSeries", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "StatsView", "get_registry", "set_registry",
+    "SpanEvent", "Tracer", "disable", "enable", "get_tracer", "set_tracer",
+    "span", "tracer_overhead_pct",
+]

@@ -1,0 +1,75 @@
+"""Shared ``--trace`` / ``--metrics-out`` wiring for the launch drivers.
+
+Every CLI (``gee_run``, ``gee_stream``, ``gee_search``) exposes the same
+two observability flags through these three hooks:
+
+* :func:`add_flags` registers the arguments on an ``ArgumentParser``;
+* :func:`setup` enables the global tracer when ``--trace`` was given
+  (before any instrumented work runs);
+* :func:`finish` writes the Chrome/Perfetto trace JSON and the
+  metrics-registry snapshot, printing where they went plus the
+  plan-stage span coverage (the trace-completeness figure the
+  acceptance gate checks: stage spans should sum to >= 90% of the
+  ``plan.execute`` total).
+"""
+
+from __future__ import annotations
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+
+def add_flags(ap) -> None:
+    """Register ``--trace`` and ``--metrics-out`` on ``ap``."""
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable span tracing and write a Chrome/Perfetto "
+                         "trace-event JSON here at exit (load it at "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a metrics-registry snapshot (counters, "
+                         "gauges, histogram summaries) as JSON here at exit")
+
+
+def setup(args) -> None:
+    """Enable the global tracer when ``--trace`` was requested."""
+    if getattr(args, "trace", None):
+        obs_trace.enable()
+
+
+def plan_span_coverage(tracer: obs_trace.Tracer | None = None):
+    """Fraction of the last ``plan.execute`` span covered by its direct
+    ``plan.stage.*`` children, or ``None`` when no plan ran under the
+    tracer.  This is the acceptance figure ``gee_run --trace`` prints:
+    stage spans summing to ~1.0x the total means the trace accounts for
+    the fit time instead of hiding it between spans."""
+    tr = tracer if tracer is not None else obs_trace.get_tracer()
+    events = tr.events()
+    roots = [e for e in events if e.name == "plan.execute"]
+    if not roots:
+        return None
+    root = roots[-1]
+    lo, hi = root.ts_us, root.ts_us + root.dur_us
+    stage_us = sum(
+        e.dur_us for e in events
+        if e.name.startswith("plan.stage.") and e.tid == root.tid
+        and e.depth == root.depth + 1
+        and lo <= e.ts_us and e.ts_us + e.dur_us <= hi + 1.0)
+    return stage_us / root.dur_us if root.dur_us > 0 else None
+
+
+def finish(args) -> None:
+    """Write the artifacts ``--trace`` / ``--metrics-out`` asked for."""
+    tr = obs_trace.get_tracer()
+    if getattr(args, "trace", None) and tr.enabled:
+        cov = plan_span_coverage(tr)
+        n_events = len(tr.events())
+        tr.write(args.trace)
+        line = f"  trace: {n_events} spans -> {args.trace}"
+        if tr.dropped:
+            line += f"  ({tr.dropped} dropped past max_events)"
+        if cov is not None:
+            line += f"  [plan stages cover {cov * 100:.1f}% of fit time]"
+        print(line)
+    if getattr(args, "metrics_out", None):
+        obs_metrics.get_registry().write_json(args.metrics_out)
+        print(f"  metrics -> {args.metrics_out}")

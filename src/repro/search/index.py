@@ -44,8 +44,20 @@ import numpy as np
 
 from repro.kernels.topk_score import (fused_topk_enabled, pairwise_scores,
                                       scored_topk, scored_topk_gathered)
+from repro.obs import metrics as obs_metrics
 
 DEFAULT_PAD_MULTIPLE = 128
+
+
+def index_stats_view(builds: int = 0) -> "obs_metrics.StatsView":
+    """The index's registry-backed stats dict (one scope per instance);
+    shared with ``repro.serve.snapshot.restore_index`` so a restored
+    index counts into the same metric names as a built one."""
+    return obs_metrics.get_registry().stats_view(
+        "gee.index", {"builds": builds, "queries": 0,
+                      "brute_force_queries": 0, "cells_probed": 0,
+                      "candidates_scored": 0, "repaired_rows": 0,
+                      "bucket_moves": 0, "table_grows": 0})
 
 
 def _ceil_to(x: int, m: int) -> int:
@@ -143,9 +155,7 @@ class ClassPartitionedIndex:
             _table=table, _cell_len=cell_len,
             _row_cell=assign.astype(np.int32), _row_slot=row_slot,
             _table_dev=None,
-            stats={"builds": 1, "queries": 0, "brute_force_queries": 0,
-                   "cells_probed": 0, "candidates_scored": 0,
-                   "repaired_rows": 0, "bucket_moves": 0, "table_grows": 0},
+            stats=index_stats_view(builds=1),
         )
         return self
 

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.incremental import DirtyRowTracker
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.search.index import ClassPartitionedIndex
 
 
@@ -88,10 +90,14 @@ class GEEQueryService:
         self._pending = 0
         self._uid = 0
         self._tracker: Optional[DirtyRowTracker] = None
-        self.stats = {"submitted": 0, "flushes": 0, "queries_scored": 0,
-                      "pad_queries": 0, "repaired_rows": 0,
-                      "bucket_moves": 0, "full_refreshes": 0,
-                      "shed_queries": 0, "flush_ms": []}
+        # registry-backed view: same dict API as before, but every counter
+        # is a named metric and flush_ms is a *bounded* histogram (the old
+        # plain list grew forever in long-running services)
+        self.stats = obs_metrics.get_registry().stats_view(
+            "gee.query", {"submitted": 0, "flushes": 0, "queries_scored": 0,
+                          "pad_queries": 0, "repaired_rows": 0,
+                          "bucket_moves": 0, "full_refreshes": 0,
+                          "shed_queries": 0, "flush_ms": []})
         if inc is not None:
             if inc.n != index.num_points:
                 raise ValueError(
@@ -102,10 +108,12 @@ class GEEQueryService:
 
     def close(self) -> None:
         """Unsubscribe from the incremental state (idempotent); a retired
-        service then costs the write path nothing."""
+        service then costs the write path nothing.  Its metrics scope is
+        released so the registry does not accumulate dead services."""
         if self.inc is not None and self._tracker is not None:
             self.inc.remove_dirty_listener(self._tracker)
             self._tracker = None
+        self.stats.close()
 
     @property
     def stale_rows(self) -> int:
@@ -182,7 +190,22 @@ class GEEQueryService:
             self.repair()            # keep freshness even on empty flushes
             return []
         t0 = time.perf_counter()
-        self.repair()
+        with obs_trace.span("serve.query_flush",
+                            pending=self._pending) as sp:
+            tickets = self._flush_batch(sp)
+        elapsed = time.perf_counter() - t0
+        self.stats["flush_ms"].append(elapsed * 1e3)
+        scored = sum(t.queries.shape[0] if t.queries is not None
+                     else t.rows.size for t in tickets)
+        if elapsed > 0 and scored:
+            obs_metrics.get_registry().gauge(
+                "serve.queries_per_sec").set(scored / elapsed)
+        return tickets
+
+    def _flush_batch(self, sp) -> list[QueryTicket]:
+        with obs_trace.span("serve.query_repair"):
+            repaired = self.repair()
+        sp.tag(repaired_rows=repaired)
 
         tickets, self._queue = self._queue, []
         self._pending = 0
@@ -213,7 +236,7 @@ class GEEQueryService:
             off += c
         self.stats["flushes"] += 1
         self.stats["queries_scored"] += total
-        self.stats["flush_ms"].append((time.perf_counter() - t0) * 1e3)
+        sp.tag(queries=total)
         return tickets
 
     def search(self, queries, k: int | None = None):
@@ -273,10 +296,12 @@ class GEEDeltaServer:
         self._edge_backlog: list = []
         self._label_backlog: list = []
         self._pending = 0
-        self.stats = {"submitted": 0, "flushes": 0, "applied_deltas": 0,
-                      "coalesced_away": 0, "rows_invalidated": 0,
-                      "reads": 0, "stale_reads": 0, "rejected_deltas": 0,
-                      "logged_records": 0, "backpressure_flushes": 0}
+        self.stats = obs_metrics.get_registry().stats_view(
+            "gee.delta", {"submitted": 0, "flushes": 0, "applied_deltas": 0,
+                          "coalesced_away": 0, "rows_invalidated": 0,
+                          "reads": 0, "stale_reads": 0,
+                          "rejected_deltas": 0, "logged_records": 0,
+                          "backpressure_flushes": 0})
 
     # -- ingest --------------------------------------------------------------
     def submit(self, delta) -> None:
@@ -325,13 +350,21 @@ class GEEDeltaServer:
     def flush(self) -> int:
         """Coalesce, log (when a WAL is attached) and apply the backlog;
         returns deltas actually applied."""
-        from repro.graph.delta import (coalesce_edge_deltas,
-                                       coalesce_label_deltas)
-
         if not self._pending:
             return 0
         applied = 0
         stale_before = self.inc.num_pending_rows
+        with obs_trace.span("serve.delta_flush", pending=self._pending,
+                            logged=self.log is not None) as sp:
+            applied = self._flush_backlog(stale_before)
+            sp.tag(applied=applied)
+        return applied
+
+    def _flush_backlog(self, stale_before: int) -> int:
+        from repro.graph.delta import (coalesce_edge_deltas,
+                                       coalesce_label_deltas)
+
+        applied = 0
         try:
             self._validate_backlog()
             merged = []

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.obs import metrics as obs_metrics
 from repro.serve.decode import sample
 
 
@@ -61,7 +62,11 @@ class BatchedServer:
         self.slot_pos = np.zeros(batch_slots, np.int64)
         self.slot_tok = np.zeros((batch_slots, 1), np.int32)
         self.queue: list[Request] = []
-        self.stats = {"ticks": 0, "tokens_out": 0, "batch_occupancy": []}
+        # batch_occupancy is a bounded histogram view: the old plain list
+        # grew one float per decode tick for the life of the server
+        self.stats = obs_metrics.get_registry().stats_view(
+            "serve.decode", {"ticks": 0, "tokens_out": 0,
+                             "batch_occupancy": []})
         self._decode = jax.jit(
             lambda p, c, t, pos: lm.decode_step(p, t, c, pos, cfg))
 

@@ -32,6 +32,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.search.service import GEEQueryService, LoadShedError
 from repro.serve.snapshot import recover
 
@@ -118,9 +119,11 @@ class ReplicaRouter:
         self._head = max((r.watermark for r in replicas), default=-1)
         if log is not None:
             self._head = max(self._head, log.head_seq)
-        self.stats = {"published_deltas": 0, "reads": 0, "shed_reads": 0,
-                      "catch_ups": 0, "catch_up_deltas": 0,
-                      "routed": {r.name: 0 for r in replicas}}
+        self.stats = obs_metrics.get_registry().stats_view(
+            "serve.router", {"published_deltas": 0, "reads": 0,
+                             "shed_reads": 0, "catch_ups": 0,
+                             "catch_up_deltas": 0,
+                             "routed": {r.name: 0 for r in replicas}})
 
     # -- write side ----------------------------------------------------------
     @property
@@ -225,3 +228,4 @@ class ReplicaRouter:
     def close(self) -> None:
         for r in self.replicas:
             r.close()
+        self.stats.close()

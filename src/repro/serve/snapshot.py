@@ -42,6 +42,7 @@ import json
 import os
 import re
 import tempfile
+import time
 from typing import Iterator, Optional, Sequence
 
 import numpy as np
@@ -53,6 +54,8 @@ from repro.core.incremental import (Delta, DirtyRowTracker, IncrementalGEE,
                                     _fill_adj)
 from repro.graph.delta import (EdgeDelta, LabelDelta, edge_delta_from_numpy,
                                label_delta_from_numpy)
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 SNAPSHOT_VERSION = 1
 
@@ -79,8 +82,9 @@ class DeltaLog:
         self.directory = directory
         recs = self._records()
         self._next = (recs[-1][0] + recs[-1][1]) if recs else 0
-        self.stats = {"appended_records": 0, "appended_deltas": 0,
-                      "replayed_deltas": 0, "pruned_records": 0}
+        self.stats = obs_metrics.get_registry().stats_view(
+            "wal", {"appended_records": 0, "appended_deltas": 0,
+                    "replayed_deltas": 0, "pruned_records": 0})
 
     def _records(self) -> list[tuple[int, int, str]]:
         """Sorted (first_seq, count, filename) of every record on disk."""
@@ -126,22 +130,30 @@ class DeltaLog:
                 raise TypeError(f"unsupported delta type {type(d).__name__}")
         first = batch[0].seq
         fname = f"rec_{first:010d}_{len(batch):03d}.npz"
-        fd, tmp = tempfile.mkstemp(prefix=".wal_tmp_", dir=self.directory)
-        try:
-            with os.fdopen(fd, "wb") as f:
-                np.savez(f, **payload)
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, os.path.join(self.directory, fname))
-        except BaseException:
+        dest = os.path.join(self.directory, fname)
+        with obs_trace.span("wal.append", seq=first, deltas=len(batch)):
+            fd, tmp = tempfile.mkstemp(prefix=".wal_tmp_",
+                                       dir=self.directory)
             try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+                with os.fdopen(fd, "wb") as f:
+                    np.savez(f, **payload)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, dest)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
         self._next = first + len(batch)
         self.stats["appended_records"] += 1
         self.stats["appended_deltas"] += len(batch)
+        try:
+            obs_metrics.get_registry().counter(
+                "wal.appended_bytes").inc(os.path.getsize(dest))
+        except OSError:                                   # pragma: no cover
+            pass
         return batch
 
     def stamp(self, deltas: "Delta | Sequence[Delta]") -> list:
@@ -162,7 +174,13 @@ class DeltaLog:
         for first, count, name in self._records():
             if first + count - 1 <= after_seq:
                 continue
-            with np.load(os.path.join(self.directory, name)) as data:
+            path = os.path.join(self.directory, name)
+            try:
+                obs_metrics.get_registry().counter(
+                    "wal.replayed_bytes").inc(os.path.getsize(path))
+            except OSError:                               # pragma: no cover
+                pass
+            with np.load(path) as data:
                 meta = json.loads(str(data["meta"]))
                 kinds = [str(k) for k in data["kinds"]]
                 for i, kind in enumerate(kinds):
@@ -288,7 +306,7 @@ def restore_index(arrays: dict, extra: dict, inc: IncrementalGEE):
     """
     import jax.numpy as jnp
 
-    from repro.search.index import ClassPartitionedIndex
+    from repro.search.index import ClassPartitionedIndex, index_stats_view
 
     im = extra["index_meta"]
     return ClassPartitionedIndex(
@@ -303,9 +321,7 @@ def restore_index(arrays: dict, extra: dict, inc: IncrementalGEE):
         _row_cell=np.asarray(arrays["index_row_cell"], np.int32),
         _row_slot=np.asarray(arrays["index_row_slot"], np.int64),
         _table_dev=None,
-        stats={"builds": 0, "queries": 0, "brute_force_queries": 0,
-               "cells_probed": 0, "candidates_scored": 0,
-               "repaired_rows": 0, "bucket_moves": 0, "table_grows": 0},
+        stats=index_stats_view(builds=0),
     )
 
 
@@ -334,7 +350,9 @@ class GEESnapshotter:
             keep_last=keep_last, failure_hook=failure_hook)
         self.log = DeltaLog(os.path.join(directory, "wal"))
         self._ticks = 0
-        self.stats = {"ticks": 0, "snapshots": 0, "wal_records_pruned": 0}
+        self.stats = obs_metrics.get_registry().stats_view(
+            "snapshot", {"ticks": 0, "snapshots": 0,
+                         "wal_records_pruned": 0})
 
     def tick(self, inc: IncrementalGEE, index=None, *, service=None,
              delta_server=None, extra: dict | None = None) -> Optional[int]:
@@ -352,18 +370,26 @@ class GEESnapshotter:
         """Quiesce (flush writes, repair the index, materialize Z), capture
         and durably write one snapshot; prune the WAL.  Returns the step
         (`watermark + 1`)."""
-        if delta_server is not None:
-            delta_server.flush()
-        if service is not None:
-            service.repair()
-        tree, meta = capture_state(inc, index, extra=extra)
-        step = int(inc.applied_seq) + 1
-        self.manager.save_async(step, tree, meta)
-        self.manager.wait()                    # durable before WAL pruning
-        self.stats["snapshots"] += 1
-        steps = ckpt.available_steps(self.manager.directory)
-        if steps:
-            self.stats["wal_records_pruned"] += self.log.prune(min(steps) - 1)
+        tr = obs_trace.get_tracer()
+        with tr.span("snapshot.write") as sp:
+            with tr.span("snapshot.quiesce"):
+                if delta_server is not None:
+                    delta_server.flush()
+                if service is not None:
+                    service.repair()
+            with tr.span("snapshot.capture"):
+                tree, meta = capture_state(inc, index, extra=extra)
+            step = int(inc.applied_seq) + 1
+            sp.tag(step=step)
+            with tr.span("snapshot.save", step=step):
+                self.manager.save_async(step, tree, meta)
+                self.manager.wait()            # durable before WAL pruning
+            self.stats["snapshots"] += 1
+            with tr.span("snapshot.prune_wal"):
+                steps = ckpt.available_steps(self.manager.directory)
+                if steps:
+                    self.stats["wal_records_pruned"] += \
+                        self.log.prune(min(steps) - 1)
         return step
 
     def close(self):
@@ -376,7 +402,14 @@ class GEESnapshotter:
 
 @dataclasses.dataclass
 class RecoveredState:
-    """What :func:`recover` hands back: a live, caught-up serving core."""
+    """What :func:`recover` hands back: a live, caught-up serving core.
+
+    ``timeline`` is the structured recovery narrative: one event dict per
+    phase (snapshot choice -- including the corrupt steps walked past --
+    WAL replay, index repair), each with its wall time, so an operator
+    can see *why* recovery picked what it picked.  The same events are
+    emitted as ``recover.*`` tracer spans and registry metrics.
+    """
 
     inc: IncrementalGEE
     index: object | None
@@ -387,6 +420,8 @@ class RecoveredState:
     repaired_rows: int
     last_meta: dict
     extra: dict
+    skipped_steps: tuple = ()
+    timeline: list = dataclasses.field(default_factory=list)
 
 
 def recover(directory: str, *, verify: bool = True,
@@ -411,47 +446,96 @@ def recover(directory: str, *, verify: bool = True,
     ``FileNotFoundError``.  With no snapshot, no WAL records and no
     ``cold_start``, the error still raises (nothing to recover from).
     """
-    mgr = CheckpointManager(os.path.join(directory, "snapshots"), interval=1)
-    try:
-        step, arrays, extra = mgr.restore_latest_arrays(verify=verify)
-    finally:
-        mgr.close()
-    if step is None:
-        if cold_start is None:
-            raise FileNotFoundError(
-                f"no loadable snapshot under {directory!r} "
-                f"(never snapshotted, or every retained snapshot is corrupt"
-                f"; pass cold_start= to replay a WAL-only directory)")
-        opts = cold_start.get("opts", GEEOptions())
-        if isinstance(opts, dict):
-            opts = GEEOptions(**opts)
-        inc = IncrementalGEE(int(cold_start["num_nodes"]),
-                             int(cold_start["num_classes"]), opts)
-        index, watermark, extra = None, -1, {}
-    else:
-        inc = restore_incremental(arrays, extra)
-        index = (restore_index(arrays, extra, inc)
-                 if with_index and extra.get("has_index") else None)
-        watermark = int(extra["watermark"])
+    tr = obs_trace.get_tracer()
+    reg = obs_metrics.get_registry()
+    timeline: list[dict] = []
+    t_total = time.perf_counter()
+    with tr.span("recover", directory=directory) as sp_root:
+        skipped: list[int] = []
+        t0 = time.perf_counter()
+        with tr.span("recover.load_snapshot") as sp:
+            mgr = CheckpointManager(os.path.join(directory, "snapshots"),
+                                    interval=1)
+            try:
+                step, arrays, extra = mgr.restore_latest_arrays(
+                    verify=verify, skipped=skipped)
+            finally:
+                mgr.close()
+            sp.tag(step=step, skipped_steps=list(skipped))
+        if step is None:
+            if cold_start is None:
+                raise FileNotFoundError(
+                    f"no loadable snapshot under {directory!r} "
+                    f"(never snapshotted, or every retained snapshot is "
+                    f"corrupt; pass cold_start= to replay a WAL-only "
+                    f"directory)")
+            opts = cold_start.get("opts", GEEOptions())
+            if isinstance(opts, dict):
+                opts = GEEOptions(**opts)
+            inc = IncrementalGEE(int(cold_start["num_nodes"]),
+                                 int(cold_start["num_classes"]), opts)
+            index, watermark, extra = None, -1, {}
+            timeline.append({
+                "event": "cold_start", "skipped_steps": list(skipped),
+                "ms": (time.perf_counter() - t0) * 1e3})
+        else:
+            inc = restore_incremental(arrays, extra)
+            index = (restore_index(arrays, extra, inc)
+                     if with_index and extra.get("has_index") else None)
+            watermark = int(extra["watermark"])
+            timeline.append({
+                "event": "load_snapshot", "step": int(step),
+                "watermark": watermark, "skipped_steps": list(skipped),
+                "with_index": index is not None,
+                "ms": (time.perf_counter() - t0) * 1e3})
+        reg.counter("recover.snapshots_skipped").inc(len(skipped))
 
-    log = DeltaLog(os.path.join(directory, "wal"))
-    tracker = DirtyRowTracker(inc.n)
-    inc.add_dirty_listener(tracker)
-    replayed, last_meta = 0, {}
-    try:
-        for _seq, delta, meta in log.replay(after_seq=watermark):
-            inc.apply(delta)
-            replayed += 1
-            if meta:
-                last_meta = meta
-    finally:
-        inc.remove_dirty_listener(tracker)
-    repaired = 0
-    if index is not None and tracker.pending:
-        rows = tracker.drain()
-        index.update_rows(rows, inc.embedding(rows))
-        repaired = int(rows.size)
+        log = DeltaLog(os.path.join(directory, "wal"))
+        tracker = DirtyRowTracker(inc.n)
+        inc.add_dirty_listener(tracker)
+        replayed, last_meta = 0, {}
+        bytes0 = reg.counter("wal.replayed_bytes").get()
+        t0 = time.perf_counter()
+        with tr.span("recover.replay", after_seq=watermark) as sp:
+            try:
+                for _seq, delta, meta in log.replay(after_seq=watermark):
+                    inc.apply(delta)
+                    replayed += 1
+                    if meta:
+                        last_meta = meta
+            finally:
+                inc.remove_dirty_listener(tracker)
+            sp.tag(replayed=replayed)
+        replay_s = time.perf_counter() - t0
+        replay_bytes = reg.counter("wal.replayed_bytes").get() - bytes0
+        if replay_s > 0 and replay_bytes:
+            reg.gauge("wal.replay_bytes_per_sec").set(
+                replay_bytes / replay_s)
+        timeline.append({"event": "replay", "replayed_deltas": replayed,
+                         "bytes": int(replay_bytes),
+                         "head_seq": int(log.head_seq),
+                         "ms": replay_s * 1e3})
+
+        repaired = 0
+        if index is not None and tracker.pending:
+            t0 = time.perf_counter()
+            with tr.span("recover.repair_index"):
+                rows = tracker.drain()
+                index.update_rows(rows, inc.embedding(rows))
+                repaired = int(rows.size)
+            timeline.append({"event": "repair_index",
+                             "repaired_rows": repaired,
+                             "ms": (time.perf_counter() - t0) * 1e3})
+        total_ms = (time.perf_counter() - t_total) * 1e3
+        timeline.append({"event": "recovered", "snapshot_step": step,
+                         "watermark": int(watermark),
+                         "replayed_deltas": replayed, "ms": total_ms})
+        sp_root.tag(step=step, replayed=replayed,
+                    skipped_steps=list(skipped))
+        reg.counter("recover.runs").inc()
+        reg.histogram("recover.total_ms").observe(total_ms)
     return RecoveredState(inc=inc, index=index, log=log, snapshot_step=step,
                           snapshot_watermark=watermark,
                           replayed_deltas=replayed, repaired_rows=repaired,
-                          last_meta=last_meta, extra=extra)
+                          last_meta=last_meta, extra=extra,
+                          skipped_steps=tuple(skipped), timeline=timeline)

@@ -1,0 +1,559 @@
+"""Observability layer: span tracer semantics (nesting, exceptions,
+bounded buffers, Perfetto export), the metrics registry + legacy
+``stats`` compat views, the disabled-instrumentation overhead gate, plan
+stage timings, and the structured recovery timeline."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.gee import GEEOptions, gee
+from repro.core.incremental import IncrementalGEE
+from repro.core.plan import GEEPlan, PreparedGraph
+from repro.graph.delta import edge_delta_from_numpy
+from repro.graph.sbm import sample_sbm
+from repro.obs import cli as obs_cli
+from repro.obs.metrics import (BoundedSeries, Histogram, MetricsRegistry,
+                               get_registry, set_registry)
+from repro.obs.trace import (Tracer, get_tracer, set_tracer, span,
+                             tracer_overhead_pct)
+
+OPTS_ALL = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+
+
+@pytest.fixture
+def fresh_obs():
+    """Isolate the process-global tracer + registry per test."""
+    tracer = Tracer(enabled=False, annotate_device=False)
+    registry = MetricsRegistry()
+    prev_t, prev_r = set_tracer(tracer), set_registry(registry)
+    try:
+        yield tracer, registry
+    finally:
+        set_tracer(prev_t)
+        set_registry(prev_r)
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_depths_and_close_order():
+    t = Tracer(enabled=True, annotate_device=False)
+    with t.span("outer", backend="x"):
+        with t.span("mid"):
+            with t.span("inner"):
+                assert t.open_spans() == ("outer", "mid", "inner")
+    assert t.open_spans() == ()
+    ev = t.events()
+    assert [e.name for e in ev] == ["inner", "mid", "outer"]  # close order
+    assert [e.depth for e in ev] == [2, 1, 0]
+    outer = ev[-1]
+    for child in ev[:-1]:
+        assert outer.ts_us <= child.ts_us
+        assert child.ts_us + child.dur_us <= outer.ts_us + outer.dur_us + 1.0
+
+
+def test_spans_close_and_record_under_exceptions():
+    t = Tracer(enabled=True, annotate_device=False)
+    with pytest.raises(ValueError):
+        with t.span("outer"):
+            with t.span("inner"):
+                raise ValueError("boom")
+    # both spans recorded, stack fully unwound, error tagged on both
+    assert t.open_spans() == ()
+    ev = {e.name: e for e in t.events()}
+    assert set(ev) == {"outer", "inner"}
+    assert ev["inner"].args["error"] == "ValueError"
+    assert ev["outer"].args["error"] == "ValueError"
+    # the tracer still works after the exception
+    with t.span("after"):
+        pass
+    assert t.events()[-1].name == "after"
+
+
+def test_disabled_span_is_shared_singleton(fresh_obs):
+    tracer, _ = fresh_obs
+    s1, s2 = span("a"), span("b", big=1)
+    assert s1 is s2                       # no allocation on the hot path
+    with s1 as s:
+        s.tag(ignored=True)               # no-op tag
+    assert tracer.events() == ()
+
+    tracer.enable()
+    with span("live", x=1) as s:
+        s.tag(y=2)
+    (e,) = tracer.events()
+    assert e.name == "live" and e.args == {"x": 1, "y": 2}
+
+
+def test_max_events_bound_drops_and_counts():
+    t = Tracer(enabled=True, max_events=3, annotate_device=False)
+    for i in range(5):
+        with t.span(f"s{i}"):
+            pass
+    assert len(t.events()) == 3
+    assert t.dropped == 2
+    t.clear()
+    assert t.events() == () and t.dropped == 0
+
+
+def test_chrome_trace_is_valid_perfetto_input(tmp_path):
+    t = Tracer(enabled=True, annotate_device=False)
+    with t.span("fit", backend="sparse_jax"):
+        with t.span("scatter", edges=10):
+            pass
+    path = t.write(str(tmp_path / "trace.json"))
+    doc = json.loads(open(path).read())          # round-trips as JSON
+    assert set(doc) == {"displayTimeUnit", "traceEvents"}
+    assert doc["displayTimeUnit"] == "ms"
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(meta) == 1 and meta[0]["name"] == "process_name"
+    assert {e["name"] for e in spans} == {"fit", "scatter"}
+    for e in spans:                               # complete-event schema
+        assert {"name", "ph", "cat", "ts", "dur", "pid", "tid",
+                "args"} <= set(e)
+    fit = next(e for e in spans if e["name"] == "fit")
+    sc = next(e for e in spans if e["name"] == "scatter")
+    assert fit["ts"] <= sc["ts"]                  # containment
+    assert sc["ts"] + sc["dur"] <= fit["ts"] + fit["dur"] + 1.0
+    assert sc["args"]["depth"] == fit["args"]["depth"] + 1
+
+
+def test_threaded_spans_keep_per_thread_stacks():
+    import threading
+
+    t = Tracer(enabled=True, annotate_device=False)
+    errs = []
+
+    def work(i):
+        try:
+            with t.span(f"outer{i}"):
+                with t.span(f"inner{i}"):
+                    pass
+        except Exception as e:                    # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(4)]
+    [th.start() for th in threads]
+    [th.join() for th in threads]
+    assert not errs
+    ev = {e.name: e for e in t.events()}
+    assert len(ev) == 8
+    for i in range(4):                            # each thread nests 0 -> 1
+        assert ev[f"outer{i}"].depth == 0
+        assert ev[f"inner{i}"].depth == 1
+        assert ev[f"inner{i}"].tid == ev[f"outer{i}"].tid
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + legacy stats compat
+# ---------------------------------------------------------------------------
+
+def test_histogram_bounded_with_exact_aggregates():
+    h = Histogram("lat", cap=16)
+    for i in range(1000):
+        h.observe(float(i))
+    assert h.count == 1000
+    assert h.total == sum(range(1000))
+    assert (h.vmin, h.vmax) == (0.0, 999.0)
+    assert len(h.values()) == 16                  # bounded store
+    s = h.summary()
+    assert s["count"] == 1000 and s["mean"] == pytest.approx(499.5)
+    assert 0.0 <= s["p50"] <= 999.0 and s["p50"] <= s["p95"] <= s["p99"]
+
+
+def test_histogram_exact_below_cap_and_reproducible():
+    h1, h2 = Histogram("a", cap=8), Histogram("a", cap=8)
+    for h in (h1, h2):
+        for v in (3.0, 1.0, 2.0):
+            h.observe(v)
+    assert h1.values() == [3.0, 1.0, 2.0]         # exact, insertion order
+    for h in (h1, h2):
+        for i in range(100):
+            h.observe(float(i))
+    assert h1.values() == h2.values()             # seeded reservoir
+
+
+def test_stats_view_legacy_semantics(fresh_obs):
+    _, reg = fresh_obs
+    stats = reg.stats_view("svc", {"flushes": 0, "flush_ms": [],
+                                   "routed": {"a": 0, "b": 0}})
+    stats["flushes"] += 3
+    assert stats["flushes"] == 3                  # int compare
+    stats["flush_ms"].append(5.0)
+    stats["flush_ms"].append(7.0)
+    assert isinstance(stats["flush_ms"], BoundedSeries)
+    np.testing.assert_allclose(np.asarray(stats["flush_ms"]), [5.0, 7.0])
+    assert float(np.percentile(np.asarray(stats["flush_ms"]), 50)) == 6.0
+    assert stats["flush_ms"]                      # truthiness
+    assert reg.snapshot()["histograms"]["svc.flush_ms"]["count"] == 2
+    stats["flush_ms"].clear()
+    assert not stats["flush_ms"] and len(stats["flush_ms"]) == 0
+    stats["routed"]["a"] += 2
+    assert sum(stats["routed"].values()) == 2
+    # every write landed in the registry under the claimed scope
+    snap = reg.snapshot()
+    assert snap["counters"]["svc.flushes"] == 3
+    assert snap["counters"]["svc.routed.a"] == 2
+    # dict-ish surface: iteration order, items, to_dict
+    assert list(stats) == ["flushes", "flush_ms", "routed"]
+    assert stats.to_dict()["routed"] == {"a": 2, "b": 0}
+    assert "flushes" in dict(stats.items() if hasattr(stats, "items")
+                             else [])
+
+
+def test_stats_view_scope_uniquification_and_close(fresh_obs):
+    _, reg = fresh_obs
+    a = reg.stats_view("gee.query", {"flushes": 0})
+    b = reg.stats_view("gee.query", {"flushes": 0})
+    assert a.scope == "gee.query" and b.scope == "gee.query#1"
+    a["flushes"] += 1
+    b["flushes"] += 5
+    snap = reg.snapshot()["counters"]
+    assert snap["gee.query.flushes"] == 1
+    assert snap["gee.query#1.flushes"] == 5
+    b.close()                                     # instance shutdown
+    snap = reg.snapshot()["counters"]
+    assert "gee.query#1.flushes" not in snap
+    assert snap["gee.query.flushes"] == 1         # first scope untouched
+    c = reg.stats_view("gee.query", {"flushes": 0})
+    assert c.scope == "gee.query#1"               # name freed for reuse
+
+
+def test_prometheus_exposition(fresh_obs):
+    _, reg = fresh_obs
+    reg.counter("wal.appends").inc(4)
+    reg.gauge("fold.edges_per_sec").set(1.5e6)
+    reg.histogram("plan.execute_ms").observe(2.0)
+    text = reg.to_prometheus()
+    assert "# TYPE wal_appends counter\nwal_appends 4" in text
+    assert "fold_edges_per_sec 1500000.0" in text
+    assert 'plan_execute_ms{quantile="0.50"} 2.0' in text
+    assert "plan_execute_ms_count 1" in text
+
+
+def test_registry_json_snapshot_roundtrip(fresh_obs, tmp_path):
+    _, reg = fresh_obs
+    reg.counter("x.n").inc()
+    reg.histogram("x.ms").observe(3.0)
+    path = reg.write_json(str(tmp_path / "metrics.json"))
+    doc = json.loads(open(path).read())
+    assert doc["counters"]["x.n"] == 1
+    assert doc["histograms"]["x.ms"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# service/serving stats ride the registry (exact equality with legacy)
+# ---------------------------------------------------------------------------
+
+def _service_scenario(n=150, seed=0):
+    from repro.search.index import ClassPartitionedIndex
+    from repro.search.service import GEEQueryService
+
+    s = sample_sbm(n, seed=seed)
+    inc = IncrementalGEE.from_graph(s.edges, s.labels, s.num_classes,
+                                    OPTS_ALL)
+    index = ClassPartitionedIndex.build(inc.embedding(), s.labels,
+                                        s.num_classes)
+    return GEEQueryService(index, inc, flush_every=8), inc, s
+
+
+def test_query_service_stats_backed_by_registry(fresh_obs):
+    _, reg = fresh_obs
+    service, inc, s = _service_scenario()
+    rng = np.random.default_rng(0)
+    for lo in range(0, 32, 8):
+        service.submit_rows(rng.integers(0, 150, 8))
+    service.flush()
+    assert service.stats["flushes"] >= 1
+    assert service.stats["queries_scored"] >= 32
+    snap = reg.snapshot()
+    scope = service.stats.scope
+    # the registry sees exactly what the legacy dict reports
+    assert snap["counters"][f"{scope}.flushes"] == service.stats["flushes"]
+    assert (snap["counters"][f"{scope}.queries_scored"]
+            == service.stats["queries_scored"])
+    # flush latency is a bounded histogram now, not an unbounded list
+    assert (snap["histograms"][f"{scope}.flush_ms"]["count"]
+            == len(service.stats["flush_ms"]))
+    assert snap["gauges"]["serve.queries_per_sec"] > 0
+    service.close()
+    assert f"{scope}.flushes" not in reg.snapshot()["counters"]
+
+
+def test_delta_server_stats_backed_by_registry(fresh_obs):
+    from repro.search.service import GEEDeltaServer
+
+    _, reg = fresh_obs
+    s = sample_sbm(150, seed=1)
+    inc = IncrementalGEE.from_graph(s.edges, s.labels, s.num_classes,
+                                    OPTS_ALL)
+    server = GEEDeltaServer(inc, flush_every=10**9)
+    rng = np.random.default_rng(1)
+    server.submit(edge_delta_from_numpy(rng.integers(0, 150, 16),
+                                        rng.integers(0, 150, 16),
+                                        rng.random(16)))
+    server.flush()
+    snap = reg.snapshot()["counters"]
+    scope = server.stats.scope
+    for key in ("submitted", "flushes", "applied_deltas"):
+        assert snap[f"{scope}.{key}"] == server.stats[key]
+    assert server.stats["applied_deltas"] == 16
+
+
+def test_batch_occupancy_is_bounded(fresh_obs):
+    """The decode server's per-tick occupancy list no longer grows without
+    bound: past the histogram cap the store stays fixed while the exact
+    count keeps counting."""
+    _, reg = fresh_obs
+    stats = reg.stats_view("serve.decode", {"ticks": 0, "tokens_out": 0,
+                                            "batch_occupancy": []})
+    cap = stats["batch_occupancy"].histogram.cap
+    for i in range(cap + 500):
+        stats["ticks"] += 1
+        stats["batch_occupancy"].append((i % 8) / 8.0)
+    assert len(stats["batch_occupancy"]) == cap
+    h = stats["batch_occupancy"].histogram
+    assert h.count == cap + 500 and stats["ticks"] == cap + 500
+
+
+# ---------------------------------------------------------------------------
+# plan instrumentation
+# ---------------------------------------------------------------------------
+
+def test_plan_traced_execution_matches_untraced(fresh_obs, sbm_small):
+    tracer, reg = fresh_obs
+    prep = PreparedGraph.wrap(sbm_small.edges)
+    plan = GEEPlan.build(prep, sbm_small.num_classes, OPTS_ALL)
+    z_ref = np.asarray(plan.execute(sbm_small.labels))    # untraced
+    assert plan.last_timings == {}                        # no trace, no cost
+
+    tracer.enable()
+    z_traced = np.asarray(plan.execute(sbm_small.labels))
+    np.testing.assert_allclose(z_traced, z_ref, rtol=1e-6, atol=1e-6)
+
+    # stage spans nest under plan.execute and account for >= 90% of it
+    cov = obs_cli.plan_span_coverage(tracer)
+    assert cov is not None and cov >= 0.9
+    # per-stage timings surfaced on the plan and in describe()
+    assert "total_ms" in plan.last_timings
+    stage_ms = [v for k, v in plan.last_timings.items() if k != "total_ms"]
+    assert stage_ms and sum(stage_ms) <= plan.last_timings["total_ms"] * 1.1
+    desc = plan.describe(timings=True)
+    assert "ms]" in desc and "total" in desc
+    # registry counters moved
+    snap = reg.snapshot()
+    assert snap["counters"]["plan.executions"] == 1       # only traced run
+    assert snap["histograms"]["plan.execute_ms"]["count"] == 1
+
+
+def test_plan_cache_hit_tags(fresh_obs, sbm_small):
+    tracer, _ = fresh_obs
+    tracer.enable()
+    prep = PreparedGraph.wrap(sbm_small.edges)
+    plan = GEEPlan.build(prep, sbm_small.num_classes, OPTS_ALL)
+    plan.execute(sbm_small.labels)                        # cold: misses
+    first = [e for e in tracer.events() if e.name == "plan.execute"][-1]
+    tracer.clear()
+    plan.execute(sbm_small.labels)                        # warm: hits
+    second = [e for e in tracer.events() if e.name == "plan.execute"][-1]
+    assert first.args["cache_misses"] >= 1
+    assert second.args["cache_misses"] == 0
+    assert second.args["cache_hits"] >= 1
+    warm_stages = [e for e in tracer.events()
+                   if e.name.startswith("plan.stage.")]
+    assert any(e.args.get("cached") for e in warm_stages)
+
+
+def test_fold_window_spans_and_throughput(fresh_obs, sbm_small):
+    tracer, reg = fresh_obs
+    tracer.enable()
+    prep = PreparedGraph.wrap(sbm_small.edges)
+    z = gee(prep, sbm_small.labels, sbm_small.num_classes, OPTS_ALL,
+            backend="chunked")
+    assert np.asarray(z).shape[0] == sbm_small.edges.num_nodes
+    windows = [e for e in tracer.events() if e.name == "fold.window"]
+    assert windows and {e.args["phase"] for e in windows} == {"degrees",
+                                                             "scatter"}
+    snap = reg.snapshot()
+    assert snap["counters"]["fold.windows"] == len(windows)
+    assert snap["counters"]["fold.edges"] > 0
+    assert snap["gauges"]["fold.edges_per_sec"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the overhead gate
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracer_overhead_under_gate(sbm_small):
+    prep = PreparedGraph.wrap(sbm_small.edges)
+    labels, k = sbm_small.labels, sbm_small.num_classes
+
+    def fit():
+        return gee(prep, labels, k, OPTS_ALL)
+
+    r = tracer_overhead_pct(fit, repeats=3, calibration_calls=20_000)
+    assert r["span_count"] >= 3                   # instrumentation is live
+    assert r["disabled_span_ns"] < 5_000          # ns-scale null path
+    # the CI headline: disabled instrumentation costs <= 2% of a fit
+    assert r["overhead_pct"] <= 2.0, r
+    assert not get_tracer().enabled               # state restored
+
+
+# ---------------------------------------------------------------------------
+# recovery timeline
+# ---------------------------------------------------------------------------
+
+def _stream_to_disk(tmp_path, n=150, seed=5, batches=3):
+    from repro.search.service import GEEDeltaServer
+    from repro.serve.snapshot import GEESnapshotter
+
+    s = sample_sbm(n, seed=seed)
+    inc = IncrementalGEE.from_graph(s.edges, s.labels, s.num_classes,
+                                    OPTS_ALL)
+    snap = GEESnapshotter(str(tmp_path), every=10**9, keep_last=5)
+    server = GEEDeltaServer(inc, flush_every=10**9, log=snap.log)
+    rng = np.random.default_rng(seed)
+    steps = []
+    for b in range(batches):
+        server.submit(edge_delta_from_numpy(rng.integers(0, n, 8),
+                                            rng.integers(0, n, 8),
+                                            rng.random(8)))
+        server.flush()
+        steps.append(snap.snapshot(inc, delta_server=server))
+    server.submit(edge_delta_from_numpy(rng.integers(0, n, 8),
+                                        rng.integers(0, n, 8),
+                                        rng.random(8)))
+    server.flush()                                 # tail past last snapshot
+    snap.close()
+    return inc, steps
+
+
+def test_recover_emits_structured_timeline(fresh_obs, tmp_path):
+    from repro.serve.snapshot import recover
+
+    _, reg = fresh_obs
+    inc, _ = _stream_to_disk(tmp_path)
+    st = recover(str(tmp_path))
+    np.testing.assert_array_equal(st.inc.embedding(), inc.embedding())
+    events = [ev["event"] for ev in st.timeline]
+    assert events == ["load_snapshot", "replay", "repair_index",
+                      "recovered"] or events == ["load_snapshot", "replay",
+                                                 "recovered"]
+    by = {ev["event"]: ev for ev in st.timeline}
+    assert by["load_snapshot"]["step"] == st.snapshot_step
+    assert by["load_snapshot"]["skipped_steps"] == []
+    assert by["replay"]["replayed_deltas"] == st.replayed_deltas == 1
+    assert by["replay"]["bytes"] > 0
+    assert by["recovered"]["ms"] >= by["replay"]["ms"]
+    assert st.skipped_steps == ()
+    snap = reg.snapshot()
+    assert snap["counters"]["recover.runs"] == 1
+    assert snap["counters"]["recover.snapshots_skipped"] == 0
+    assert snap["gauges"]["wal.replay_bytes_per_sec"] > 0
+    assert snap["histograms"]["recover.total_ms"]["count"] == 1
+
+
+def test_recover_timeline_reports_corrupt_steps(fresh_obs, tmp_path):
+    import os
+
+    from repro.serve.snapshot import recover
+
+    _, reg = fresh_obs
+    inc, steps = _stream_to_disk(tmp_path)
+    # corrupt the newest snapshot so recover falls back one step
+    step_dir = os.path.join(str(tmp_path), "snapshots",
+                            f"step_{steps[-1]:010d}")
+    manifest = json.loads(
+        open(os.path.join(step_dir, "manifest.json")).read())
+    entry = sorted(manifest["index"].items())[0][1]
+    path = os.path.join(step_dir, entry["file"])
+    np.save(path, np.full_like(np.load(path), 7.0))
+
+    st = recover(str(tmp_path))
+    np.testing.assert_array_equal(st.inc.embedding(), inc.embedding())
+    assert st.snapshot_step == steps[-2]
+    assert st.skipped_steps == (steps[-1],)
+    by = {ev["event"]: ev for ev in st.timeline}
+    assert by["load_snapshot"]["skipped_steps"] == [steps[-1]]
+    assert by["replay"]["replayed_deltas"] == st.replayed_deltas >= 2
+    assert reg.snapshot()["counters"]["recover.snapshots_skipped"] == 1
+
+
+def test_recover_cold_start_timeline(fresh_obs, tmp_path):
+    from repro.serve.snapshot import DeltaLog, recover
+
+    import os
+
+    log = DeltaLog(os.path.join(str(tmp_path), "wal"))
+    rng = np.random.default_rng(2)
+    log.append([edge_delta_from_numpy(rng.integers(0, 20, 4),
+                                      rng.integers(0, 20, 4),
+                                      rng.random(4))])
+    st = recover(str(tmp_path), cold_start={"num_nodes": 20,
+                                            "num_classes": 2})
+    events = [ev["event"] for ev in st.timeline]
+    assert events[0] == "cold_start"
+    assert events[-1] == "recovered"
+    assert st.replayed_deltas == 1
+
+
+# ---------------------------------------------------------------------------
+# router + WAL metrics
+# ---------------------------------------------------------------------------
+
+def test_router_routed_counts_in_registry(fresh_obs):
+    from repro.serve.replica import GEEReplica, ReplicaRouter
+
+    _, reg = fresh_obs
+    service, inc, s = _service_scenario(seed=3)
+    service.close()
+    from repro.search.index import ClassPartitionedIndex
+
+    def mk(name, seed):
+        st = sample_sbm(150, seed=3)
+        rep_inc = IncrementalGEE.from_graph(st.edges, st.labels,
+                                            st.num_classes, OPTS_ALL)
+        idx = ClassPartitionedIndex.build(rep_inc.embedding(), st.labels,
+                                          st.num_classes)
+        return GEEReplica(rep_inc, idx, name=name, flush_every=4)
+
+    router = ReplicaRouter([mk("r0", 0), mk("r1", 1)])
+    rng = np.random.default_rng(4)
+    for _ in range(6):
+        router.read_rows(rng.integers(0, 150, 4), k=5)
+    assert router.stats["reads"] == 6
+    routed = router.stats["routed"]
+    assert sum(routed.values()) == 6
+    snap = reg.snapshot()["counters"]
+    scope = router.stats.scope
+    assert snap[f"{scope}.reads"] == 6
+    routed_scope = router.stats["routed"].scope
+    assert (snap[f"{routed_scope}.r0"] + snap[f"{routed_scope}.r1"]) == 6
+    router.close()
+    assert f"{scope}.reads" not in reg.snapshot()["counters"]
+
+
+def test_wal_byte_counters(fresh_obs, tmp_path):
+    from repro.serve.snapshot import DeltaLog
+
+    _, reg = fresh_obs
+    log = DeltaLog(str(tmp_path))
+    rng = np.random.default_rng(6)
+    log.append([edge_delta_from_numpy(rng.integers(0, 50, 8),
+                                      rng.integers(0, 50, 8),
+                                      rng.random(8))])
+    snap = reg.snapshot()["counters"]
+    appended = {k: v for k, v in snap.items()
+                if k.endswith("appended_bytes")}
+    assert appended and all(v > 0 for v in appended.values())
+    log2 = DeltaLog(str(tmp_path))
+    replayed = list(log2.replay(after_seq=-1))
+    assert len(replayed) == 1
+    snap = reg.snapshot()["counters"]
+    replay_bytes = {k: v for k, v in snap.items()
+                    if k.endswith("replayed_bytes")}
+    assert any(v > 0 for v in replay_bytes.values())
