@@ -104,6 +104,91 @@ def _run_child(mode, file, chunk_edges, z_out, opt_flags, repeats=3):
     return json.loads(line)
 
 
+def _overlap_cell(path, opt_flags, repeats=2, target_windows=12):
+    """Synchronous vs. prefetched fold, run in the parent process.
+
+    Two numbers: ``prefetch_speedup`` on a *throttled* pipeline
+    (simulated slow disk on the source plus simulated pack/H2D latency
+    on the stage, together sized at 2x the measured per-window compute
+    -- the ingestion-bound regime the pipeline exists for, asserted via
+    ``--min-prefetch-speedup``) and ``prefetch_speedup_real`` on the raw
+    mmap fixture (reported, never gated: a warm page cache and
+    dispatch-dominated CPU windows leave little to hide).
+
+    The synchronous baseline pays the full simulated latency serially on
+    its one thread; the prefetched run splits it the way the pipeline
+    does -- read latency on the reader thread, staging latency across
+    the ``depth`` workers -- so the measured speedup is exactly the
+    overlap the tentpole claims.  The staged windows pass through
+    unchanged, so both runs fold identical data (asserted <= 1e-5).
+    """
+    import jax
+
+    from repro.core.chunked import gee_chunked
+    from repro.core.gee import GEEOptions
+    from repro.graph.io import load_labels, open_edge_list
+    from repro.graph.prefetch import (PrefetchingWindowSource,
+                                      ThrottledWindowSource)
+
+    opts = GEEOptions(laplacian="--lap" in opt_flags,
+                      diag_aug="--diag" in opt_flags,
+                      correlation="--cor" in opt_flags)
+    ch = open_edge_list(path)
+    ch = ch.rechunked(max(1, ch.num_edges // target_windows))
+    labels = load_labels(path)
+    k = int(labels.max()) + 1
+
+    def timed(source, depth=None):
+        ts, z = [], None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            kw = {} if depth is None else {"prefetch_windows": depth}
+            z = jax.block_until_ready(
+                gee_chunked(source, labels, k, opts, **kw))
+            ts.append(time.perf_counter() - t0)
+        return min(ts), np.asarray(z)
+
+    timed(ch, 0)                                  # warmup / compile
+    t_sync_real, z_sync = timed(ch, 0)
+    t_pref_real, z_pref = timed(ch, 2)
+    err = float(np.abs(z_sync - z_pref).max())
+    assert err <= 1e-5, f"prefetched fold diverged: {err}"
+
+    # simulated per-window latency: 2x the measured compute, split 1/3
+    # disk read (serial, reader thread) + 2/3 pack/H2D (parallel across
+    # the depth-2 workers) -- ~2x ideal overlap, robust at the 1.3x gate
+    passes = 2 if opts.laplacian else 1
+    latency = 2.0 * t_sync_real / (passes * ch.num_windows)
+    d_read, d_stage = latency / 3.0, 2.0 * latency / 3.0
+
+    slow_sync = ThrottledWindowSource(ch, delay_s=d_read + d_stage)
+    t_sync, z_s = timed(slow_sync, 0)
+
+    def slow_stage(w):                 # simulated pack + H2D per window
+        time.sleep(d_stage)
+        return w
+
+    pf = PrefetchingWindowSource(ThrottledWindowSource(ch, delay_s=d_read),
+                                 depth=2, stage=slow_stage)
+    t_pref, z_p = timed(pf)            # already wrapped: passes through
+    err_slow = float(np.abs(z_s - z_p).max())
+    assert err_slow <= 1e-5, f"throttled prefetched fold diverged: {err_slow}"
+
+    cell = {
+        "prefetch_speedup": t_sync / t_pref,
+        "prefetch_speedup_real": t_sync_real / t_pref_real,
+        "prefetch_delay_s": latency,
+        "prefetch_windows": int(ch.num_windows),
+        "prefetch_max_abs_err": max(err, err_slow),
+    }
+    print(f"overlap: throttled ({latency*1e3:.2f}ms/window x"
+          f"{ch.num_windows}) sync={t_sync*1e3:8.1f}ms "
+          f"prefetched={t_pref*1e3:8.1f}ms -> "
+          f"{cell['prefetch_speedup']:.2f}x  "
+          f"(real source {cell['prefetch_speedup_real']:.2f}x)")
+    return cell
+
+
 def run(nodes=NODES, deg=10, classes=5, chunk_edges=1 << 18, seed=0,
         workdir=None, opt_flags=OPTS_FLAGS, repeats=3):
     from repro.graph.datasets import DatasetSpec, synth_to_disk
@@ -146,6 +231,10 @@ def run(nodes=NODES, deg=10, classes=5, chunk_edges=1 << 18, seed=0,
               f"({row['eps_chunked']/1e6:6.2f} vs "
               f"{row['eps_inmem']/1e6:6.2f} M edges/s)  err={err:.1e}")
 
+    # overlap cell: the largest fixture, rechunked to ~12 windows
+    overlap = _overlap_cell(path, opt_flags,
+                            repeats=max(2, min(repeats, 3)))
+
     e_span = (max(r["edges_undirected"] for r in rows)
               / min(r["edges_undirected"] for r in rows))
     rss_growth = (max(r["rss_chunked_kb"] for r in rows)
@@ -158,7 +247,7 @@ def run(nodes=NODES, deg=10, classes=5, chunk_edges=1 << 18, seed=0,
           f"worst chunked/inmem time ratio {slowdown:.2f}x")
     return rows, {"edge_span": e_span, "rss_growth_chunked": rss_growth,
                   "rss_growth_inmem": rss_growth_inmem,
-                  "max_slowdown": slowdown}
+                  "max_slowdown": slowdown, **overlap}
 
 
 def main(argv=None):
@@ -186,6 +275,10 @@ def main(argv=None):
                     help="fail if chunked/inmem embed-time ratio exceeds "
                          "this (0 disables; wall-clock gating is for local "
                          "perf runs, CI only records the JSON)")
+    ap.add_argument("--min-prefetch-speedup", type=float, default=1.3,
+                    help="fail if the prefetched fold on the throttled "
+                         "slow source is not at least this much faster "
+                         "than the synchronous path (0 disables)")
     args = ap.parse_args(argv)
     if args.child:
         return _child(args)
@@ -207,6 +300,12 @@ def main(argv=None):
         raise SystemExit(
             f"chunked is {summary['max_slowdown']:.2f}x slower than "
             f"in-memory, over --max-slowdown {args.max_slowdown}")
+    if (args.min_prefetch_speedup
+            and summary["prefetch_speedup"] < args.min_prefetch_speedup):
+        raise SystemExit(
+            f"prefetch speedup {summary['prefetch_speedup']:.2f}x on the "
+            f"throttled source is below --min-prefetch-speedup "
+            f"{args.min_prefetch_speedup}")
     return rows
 
 

@@ -74,10 +74,12 @@ def _extract(payload: dict) -> dict:
             put("recompute_s", row.get("t_recompute"), LOWER)
     elif bench == "gee_chunked":
         put("max_slowdown", payload.get("max_slowdown"), LOWER)
+        put("prefetch_speedup", payload.get("prefetch_speedup"), HIGHER)
     elif bench == "gee_stream_shard":
         put("eps_max_shards", payload.get("eps_max_shards"), HIGHER)
         put("scaling_2x", payload.get("scaling_2x"), HIGHER)
         put("rss_growth", payload.get("rss_growth"), LOWER)
+        put("prefetch_speedup", payload.get("prefetch_speedup"), HIGHER)
     elif bench == "gee_plan":
         put("prep_reuse_speedup", payload.get("worst_speedup"), HIGHER)
         put("fused_speedup", payload.get("fused_speedup"), HIGHER)

@@ -59,6 +59,9 @@ class GEEEmbedder:
     mesh_axes: tuple = ("data",)
     local_backend: str = "segment_sum"       # 'distributed' only
     chunk_edges: Optional[int] = None        # 'chunked' / file-backed only
+    # streaming backends: windows staged ahead by background threads
+    # (None: REPRO_GEE_PREFETCH_WINDOWS or 2; 0: synchronous reads)
+    prefetch_windows: Optional[int] = None
 
     _edges: Optional[EdgeList] = dataclasses.field(default=None, repr=False)
     _prepared: Optional[PreparedGraph] = dataclasses.field(default=None,
@@ -315,12 +318,14 @@ class GEEEmbedder:
             return gee_streamed_sharded(source, labels, self.num_classes,
                                         self.options, mesh=self.mesh,
                                         axes=self.mesh_axes,
-                                        local_backend=self.local_backend)
+                                        local_backend=self.local_backend,
+                                        prefetch_windows=self.prefetch_windows)
         if self._chunked is not None:
             from repro.core.chunked import gee_chunked
 
             return gee_chunked(self._chunked, labels, self.num_classes,
-                               self.options)
+                               self.options,
+                               prefetch_windows=self.prefetch_windows)
         if self.backend == "distributed":
             from repro.core.distributed import gee_distributed
 
@@ -334,9 +339,10 @@ class GEEEmbedder:
         # Everything else is one plan over the shared PreparedGraph, so a
         # refit / option change / backend switch reuses all prep artifacts
         # (the chunked route reuses its cached chunk manifest too).
-        return GEEPlan.build(self._prepared, self.num_classes, self.options,
-                             backend=self.backend,
-                             chunk_edges=self.chunk_edges).execute(labels)
+        return GEEPlan.build(
+            self._prepared, self.num_classes, self.options,
+            backend=self.backend, chunk_edges=self.chunk_edges,
+            prefetch_windows=self.prefetch_windows).execute(labels)
 
 
 def node_features(edges: EdgeList, labels, num_classes: int,

@@ -64,7 +64,8 @@ _fold_z = fold_z
 
 def gee_chunked(chunked: ChunkedEdgeList, labels, num_classes: int,
                 opts: GEEOptions = GEEOptions(),
-                impl: str = "jnp") -> jax.Array:
+                impl: str = "jnp",
+                prefetch_windows: int | None = None) -> jax.Array:
     """Chunk-streamed GEE over any :class:`ChunkedEdgeList` source.
 
     The single-device instance of the shared
@@ -76,10 +77,13 @@ def gee_chunked(chunked: ChunkedEdgeList, labels, num_classes: int,
     every option setting); host memory stays O(chunk_edges + N*K).
     ``impl`` selects the epilogue row-norm implementation
     (``repro.core.epilogue.row_l2_normalize``; ``"auto"`` picks the
-    Pallas kernel on TPU).
+    Pallas kernel on TPU).  ``prefetch_windows`` stages windows ahead on
+    background threads (``None``: ``REPRO_GEE_PREFETCH_WINDOWS`` or 2;
+    ``0``: synchronous reads).
     """
     k = int(num_classes)
-    z, winv, dinv = stream_fold(chunked, labels, k, opts)
+    z, winv, dinv = stream_fold(chunked, labels, k, opts,
+                                prefetch_windows=prefetch_windows)
     return finalize(z, jnp.asarray(labels, jnp.int32), winv, dinv,
                     num_classes=k, opts=opts, impl=impl)
 
@@ -87,6 +91,7 @@ def gee_chunked(chunked: ChunkedEdgeList, labels, num_classes: int,
 def gee_chunked_from_file(path: str, labels=None, num_classes: int | None = None,
                           opts: GEEOptions = GEEOptions(),
                           chunk_edges: int = DEFAULT_CHUNK_EDGES,
+                          prefetch_windows: int | None = None,
                           **open_kw) -> jax.Array:
     """Embed straight from an edge file (see ``repro.graph.io`` formats).
 
@@ -101,4 +106,5 @@ def gee_chunked_from_file(path: str, labels=None, num_classes: int | None = None
                              f"{path}.labels.npy")
     if num_classes is None:
         num_classes = int(max(int(jnp.asarray(labels).max()) + 1, 1))
-    return gee_chunked(chunked, labels, num_classes, opts)
+    return gee_chunked(chunked, labels, num_classes, opts,
+                       prefetch_windows=prefetch_windows)

@@ -45,11 +45,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.epilogue import apply_epilogue, finalize, inv_sqrt_degrees
 from repro.core.gee import GEEOptions, class_weight_inv
 from repro.distributed.compat import shard_map, shard_map_nocheck
+from repro.graph.prefetch import PlaneWindow, prefetch_windows
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
@@ -152,13 +153,20 @@ def combine_partials(z_part, labels, winv, dinv, *, mesh: Mesh,
 # single-device streaming instance (what repro.core.chunked wraps)
 # ---------------------------------------------------------------------------
 
-def stream_fold(source, labels, num_classes: int, opts: GEEOptions):
+def stream_fold(source, labels, num_classes: int, opts: GEEOptions, *,
+                prefetch_windows: int | None = None):
     """Two-pass fold of a ``WindowSource`` on the current default device.
 
     Returns ``(z_flat, winv, dinv)`` ready for
     :func:`repro.core.epilogue.finalize`.  Peak memory is
     O(window + N*K) however large E grows; every window has identical
     array shapes, so the jitted folds trace once per configuration.
+
+    ``prefetch_windows`` stages that many windows ahead on background
+    threads (read + pad + ``device_put``) so host-side window costs
+    overlap the device fold; ``None`` resolves through
+    ``REPRO_GEE_PREFETCH_WINDOWS`` (default 2) and ``0`` is the
+    synchronous path.
     """
     n, k = source.num_nodes, int(num_classes)
     labels = jnp.asarray(labels, jnp.int32)
@@ -167,10 +175,10 @@ def stream_fold(source, labels, num_classes: int, opts: GEEOptions):
                          f"graph has {n}")
     winv = class_weight_inv(labels, k)
     und = source.undirected
+    source = _prefetch(source, prefetch_windows)
     tr = obs_trace.get_tracer()
     traced = tr.enabled
-    t0 = time.perf_counter()
-    windows = edges_folded = 0
+    degree_windows = 0
 
     if opts.laplacian:
         deg = jnp.zeros((n,), jnp.float32)
@@ -181,14 +189,15 @@ def stream_fold(source, labels, num_classes: int, opts: GEEOptions):
                                    undirected=und)
                 if traced:       # async dispatch: sync for honest spans
                     deg.block_until_ready()
-            windows += 1
-            edges_folded += int(w.num_edges)
+            degree_windows += 1
         if opts.diag_aug:
             deg = deg + 1.0
         dinv = inv_sqrt_degrees(deg)
     else:
         dinv = jnp.ones((n,), jnp.float32)
 
+    t_scatter = time.perf_counter()
+    scatter_windows = edges_folded = 0
     z = jnp.zeros((n * k,), jnp.float32)
     for i, w in enumerate(source.windows()):                 # pass 2
         with tr.span("fold.window", phase="scatter", idx=i,
@@ -197,25 +206,42 @@ def stream_fold(source, labels, num_classes: int, opts: GEEOptions):
                        num_classes=k, undirected=und)
             if traced:
                 z.block_until_ready()
-        windows += 1
+        scatter_windows += 1
         edges_folded += int(w.num_edges)
 
-    _record_fold(windows, edges_folded, time.perf_counter() - t0)
+    _record_fold(degree_windows, scatter_windows, edges_folded,
+                 time.perf_counter() - t_scatter)
     return z, winv, dinv
 
 
-def _record_fold(windows: int, edges: int, elapsed_s: float) -> None:
-    """Registry bookkeeping shared by the streaming folds: window/edge
-    counters plus the ``fold.edges_per_sec`` derived gauge.  Runs once
-    per fold (never per window), so the always-on cost is a few lock
-    acquisitions.  The rate is honest wall time under tracing (stage
-    syncs forced); untraced it includes async dispatch overlap.
+def _prefetch(source, depth: int | None, stage=None, sharding=None):
+    """Wrap a window source for background staging (module-level import
+    aliased to avoid shadowing by the ``prefetch_windows=`` kwarg)."""
+    return prefetch_windows(source, depth, stage=stage, sharding=sharding)
+
+
+def _record_fold(degree_windows: int, scatter_windows: int, edges: int,
+                 scatter_s: float) -> None:
+    """Registry bookkeeping shared by the streaming folds.  Runs once per
+    fold (never per window), so the always-on cost is a few lock
+    acquisitions.
+
+    Each logical window counts once in ``fold.windows`` (the scatter
+    pass walks every window exactly once in every configuration); the
+    laplacian degree pre-pass is tracked separately as
+    ``fold.windows.degrees`` so two-pass folds no longer double-count
+    windows or edges.  ``fold.edges`` and the ``fold.edges_per_sec``
+    gauge come from the scatter pass only: edges folded over scatter-pass
+    wall time (honest under tracing, where stage syncs are forced;
+    untraced it includes async dispatch overlap).
     """
     reg = obs_metrics.get_registry()
-    reg.counter("fold.windows").inc(windows)
+    reg.counter("fold.windows").inc(scatter_windows)
+    reg.counter("fold.windows.scatter").inc(scatter_windows)
+    reg.counter("fold.windows.degrees").inc(degree_windows)
     reg.counter("fold.edges").inc(edges)
-    if elapsed_s > 0 and edges:
-        reg.gauge("fold.edges_per_sec").set(edges / elapsed_s)
+    if scatter_s > 0 and edges:
+        reg.gauge("fold.edges_per_sec").set(edges / scatter_s)
 
 
 # ---------------------------------------------------------------------------
@@ -336,7 +362,8 @@ def gee_streamed_sharded(source, labels, num_classes: int,
                          mesh: Mesh | None = None,
                          axes: tuple[str, ...] = ("data",),
                          local_backend: str = "segment_sum",
-                         impl: str = "jnp") -> jax.Array:
+                         impl: str = "jnp",
+                         prefetch_windows: int | None = None) -> jax.Array:
     """Disk-bounded multi-device GEE: stream windows, fold per shard.
 
     ``source`` is anything :func:`repro.graph.io.as_window_source`
@@ -355,7 +382,11 @@ def gee_streamed_sharded(source, labels, num_classes: int,
     ``mesh=None`` builds a 1-D ``("data",)`` mesh over all local
     devices.  ``local_backend`` is ``"segment_sum"`` (default) or
     ``"pallas"`` (per-window ELL planes contracted by ``gee_spmm``).
-    Returns Z rows sharded over ``axes``, sliced to [N, K].
+    ``prefetch_windows`` stages reads, ELL packing and the sharded
+    ``device_put`` on background threads so window *i+1*'s host costs
+    overlap window *i*'s donated fold (``None``: env-resolved default 2;
+    ``0``: synchronous).  Returns Z rows sharded over ``axes``, sliced
+    to [N, K].
     """
     from repro.graph.io import as_window_source
 
@@ -384,14 +415,19 @@ def gee_streamed_sharded(source, labels, num_classes: int,
     winv = class_weight_inv(labels, k)
     und = source.undirected
     g = pad_nodes(source.window_edges, p)   # window split into P sub-windows
+    # Stage windows eagerly on background threads, already committed with
+    # the sharding the jitted folds consume (1-D edge arrays split over
+    # ``axes``), so window i+1's host->device copy overlaps window i's
+    # donated fold.
+    pf = _prefetch(source, prefetch_windows,
+                   sharding=NamedSharding(mesh, P(axes)))
     tr = obs_trace.get_tracer()
     traced = tr.enabled
-    t0 = time.perf_counter()
-    windows = edges_folded = 0
+    degree_windows = 0
 
     if opts.laplacian:
         deg_parts = jnp.zeros((p, n_pad), jnp.float32)
-        for i, w in enumerate(source.windows(pad_to=g)):     # pass 1
+        for i, w in enumerate(pf.windows(pad_to=g)):         # pass 1
             with tr.span("fold.window", phase="degrees", idx=i, shards=p,
                          edges=int(w.num_edges)):
                 deg_parts = _fold_degrees_sharded(
@@ -399,8 +435,7 @@ def gee_streamed_sharded(source, labels, num_classes: int,
                     mesh=mesh, axes=axes, undirected=und)
                 if traced:
                     deg_parts.block_until_ready()
-            windows += 1
-            edges_folded += int(w.num_edges)
+            degree_windows += 1
         deg = deg_parts.sum(axis=0)
         if opts.diag_aug:
             deg = deg + 1.0
@@ -408,23 +443,42 @@ def gee_streamed_sharded(source, labels, num_classes: int,
     else:
         dinv = jnp.ones((n_pad,), jnp.float32)
 
+    t_scatter = time.perf_counter()
+    scatter_windows = edges_folded = 0
     z_parts = jnp.zeros((p, n_pad * k), jnp.float32)
     if local_backend == "pallas":
         interpret = jax.default_backend() != "tpu"
-        for i, w in enumerate(source.windows(pad_to=g)):     # pass 2
+        plane_sharding = NamedSharding(mesh, P(axes, None))
+
+        def plane_stage(w):
+            """Worker-thread stage: ELL plane pack + sharded device_put."""
+            cols, vals = _window_plane(w, p, n_pad, und)
+            # per-leaf device_put: a tuple arg lowers to an XLA
+            # computation, which the CPU client would serialize behind
+            # the consumer's in-flight fold steps
+            cols = jax.device_put(cols, plane_sharding)
+            vals = jax.device_put(vals, plane_sharding)
+            jax.block_until_ready((cols, vals))
+            return PlaneWindow(int(w.num_edges), cols, vals)
+
+        pf_planes = _prefetch(source, prefetch_windows, stage=plane_stage)
+        for i, w in enumerate(pf_planes.windows(pad_to=g)):  # pass 2
             with tr.span("fold.window", phase="scatter", idx=i, shards=p,
                          edges=int(w.num_edges)):
-                cols, vals = _window_plane(w, p, n_pad, und)
+                if isinstance(w, PlaneWindow):               # pre-packed
+                    cols, vals = w.cols, w.vals
+                else:                                        # synchronous
+                    cols, vals = _window_plane(w, p, n_pad, und)
                 z_parts = _fold_plane_sharded(
                     z_parts, cols, vals, labels, winv, dinv,
                     mesh=mesh, axes=axes, num_classes=k,
                     interpret=interpret)
                 if traced:
                     z_parts.block_until_ready()
-            windows += 1
+            scatter_windows += 1
             edges_folded += int(w.num_edges)
     else:
-        for i, w in enumerate(source.windows(pad_to=g)):     # pass 2
+        for i, w in enumerate(pf.windows(pad_to=g)):         # pass 2
             with tr.span("fold.window", phase="scatter", idx=i, shards=p,
                          edges=int(w.num_edges)):
                 z_parts = _fold_z_sharded(
@@ -432,7 +486,7 @@ def gee_streamed_sharded(source, labels, num_classes: int,
                     mesh=mesh, axes=axes, num_classes=k, undirected=und)
                 if traced:
                     z_parts.block_until_ready()
-            windows += 1
+            scatter_windows += 1
             edges_folded += int(w.num_edges)
 
     with tr.span("fold.combine", shards=p, n=n, k=k):
@@ -440,7 +494,8 @@ def gee_streamed_sharded(source, labels, num_classes: int,
                              axes=axes, num_classes=k, opts=opts)
         if traced:
             z.block_until_ready()
-    _record_fold(windows, edges_folded, time.perf_counter() - t0)
+    _record_fold(degree_windows, scatter_windows, edges_folded,
+                 time.perf_counter() - t_scatter)
     return z[:n]
 
 

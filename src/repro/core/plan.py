@@ -425,6 +425,9 @@ class GEEPlan:
     chunk_edges: Optional[int] = None
     impl: str = "auto"                # epilogue row-norm impl
     fused: bool = False               # pallas-only: fused-epilogue megakernel
+    # streaming backends only: windows staged ahead by background threads
+    # (resolved by build(); None defers to the env default at execute time)
+    prefetch_windows: Optional[int] = None
     # per-stage wall times (ms) of the last *traced* execution; a mutable
     # cell on a frozen plan -- excluded from eq/repr, never reassigned
     _timings: dict = dataclasses.field(default_factory=dict, compare=False,
@@ -435,7 +438,8 @@ class GEEPlan:
               opts: GEEOptions = GEEOptions(), *, backend: str = "auto",
               device: str | None = None, chunk_edges: int | None = None,
               budget_bytes: int | None = None, impl: str = "auto",
-              fused: "bool | str" = "auto") -> "GEEPlan":
+              fused: "bool | str" = "auto",
+              prefetch_windows: int | None = None) -> "GEEPlan":
         prepared = PreparedGraph.wrap(graph)
         if backend == "auto":
             backend = select_backend(prepared, num_classes, device=device,
@@ -447,11 +451,23 @@ class GEEPlan:
                 f"GEEEmbedder, or 'streamed_sharded' for the default mesh)")
         if fused == "auto":
             fused = select_fused(backend, opts, device=device)
+        if backend in ("chunked", "streamed_sharded"):
+            from repro.graph.prefetch import resolve_prefetch_depth
+            prefetch_windows = resolve_prefetch_depth(prefetch_windows)
+        else:
+            prefetch_windows = None      # knob only exists for streaming
         return GEEPlan(prepared=prepared, num_classes=int(num_classes),
                        opts=opts, backend=backend, chunk_edges=chunk_edges,
-                       impl=impl, fused=bool(fused) and backend == "pallas")
+                       impl=impl, fused=bool(fused) and backend == "pallas",
+                       prefetch_windows=prefetch_windows)
 
     # -- introspection -------------------------------------------------------
+    @property
+    def _prefetch_detail(self) -> str:
+        """Human-readable prefetch depth for ``stages``/``describe()``."""
+        return "env" if self.prefetch_windows is None \
+            else str(self.prefetch_windows)
+
     @property
     def stages(self) -> Tuple[PlanStage, ...]:
         p, o = self.prepared, self.opts
@@ -485,7 +501,8 @@ class GEEPlan:
             chunk = int(self.chunk_edges or DEFAULT_CHUNK_EDGES)
             out.append(PlanStage("prep", "chunk_manifest",
                                  cached=p.is_cached(("chunked", chunk)),
-                                 detail=f"window={chunk} edges"))
+                                 detail=f"window={chunk} edges, "
+                                        f"prefetch={self._prefetch_detail}"))
             out.append(PlanStage("compute", "two_pass_stream",
                                  detail="degree fold + per-class fold"))
         elif self.backend == "streamed_sharded":
@@ -495,7 +512,9 @@ class GEEPlan:
             out.append(PlanStage(
                 "prep", "chunk_manifest",
                 cached=p.is_cached(("chunked", chunk)),
-                detail=f"window={chunk} edges, split across devices"))
+                detail=f"window={chunk} edges, "
+                       f"prefetch={self._prefetch_detail}, "
+                       f"split across devices"))
             out.append(PlanStage(
                 "compute", "window_shard_fold",
                 detail="per-device sub-window fold, donated partials"))
@@ -660,7 +679,8 @@ class GEEPlan:
                 lambda: p.chunked(chunk))
             return self._stage(
                 "compute", "two_pass_stream", False,
-                lambda: gee_chunked(manifest, labels, k, o, impl=self.impl))
+                lambda: gee_chunked(manifest, labels, k, o, impl=self.impl,
+                                    prefetch_windows=self.prefetch_windows))
         if self.backend == "streamed_sharded":
             from repro.core.fold import gee_streamed_sharded
 
@@ -672,7 +692,9 @@ class GEEPlan:
             # default mesh over all local devices; rows come back [:N]
             return self._stage(
                 "compute", "window_shard_fold", False,
-                lambda: gee_streamed_sharded(manifest, labels, k, o))
+                lambda: gee_streamed_sharded(
+                    manifest, labels, k, o,
+                    prefetch_windows=self.prefetch_windows))
         if self.backend == "dense_jax":
             return self._stage(
                 "compute", "dense_matmul", False,

@@ -55,6 +55,7 @@ import os
 import struct
 from typing import Iterator, Protocol, Tuple, runtime_checkable
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.graph.containers import EdgeList, edge_list_from_numpy, symmetrize
@@ -195,16 +196,29 @@ class ChunkedEdgeList:
                 np.empty(0, np.int32), np.empty(0, np.int32),
                 np.empty(0, np.float32), self.num_nodes, pad_to=pad)
             return
+        want = (np.int32, np.int32, np.float32)
         for lo in range(0, self.num_edges, c):
             hi = min(lo + c, self.num_edges)
             assert hi > lo, "window with an empty valid prefix"
-            w = np.ascontiguousarray(self.weight[lo:hi])
+            w = self.weight[lo:hi]
             if not np.any(w):
                 continue               # all-padding window: exact no-op
-            yield edge_list_from_numpy(
-                np.ascontiguousarray(self.src[lo:hi]),
-                np.ascontiguousarray(self.dst[lo:hi]),
-                w, self.num_nodes, pad_to=pad)
+            s, d = self.src[lo:hi], self.dst[lo:hi]
+            if (hi - lo == pad
+                    and (s.dtype, d.dtype, w.dtype) == want
+                    and s.flags.c_contiguous and d.flags.c_contiguous
+                    and w.flags.c_contiguous):
+                # Full-width window of already-typed contiguous slices:
+                # no padding tail to write, so skip the zero-fill + copy
+                # ``edge_list_from_numpy`` would allocate per window.  On
+                # CPU the yielded arrays may alias the backing storage,
+                # which consumers treat as read-only.
+                yield EdgeList(src=jnp.asarray(s), dst=jnp.asarray(d),
+                               weight=jnp.asarray(w),
+                               num_nodes=self.num_nodes, num_edges=hi - lo)
+            else:
+                yield edge_list_from_numpy(s, d, w, self.num_nodes,
+                                           pad_to=pad)
 
     def _raw_windows(self) -> Iterator[EdgeList]:
         """Every stored window, all-padding ones included -- the save /

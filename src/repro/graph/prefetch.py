@@ -1,0 +1,415 @@
+"""Pipelined window prefetch: overlap reads, packing and H2D staging.
+
+The streaming folds (``repro.core.fold``) are two tight loops over
+``WindowSource.windows()``: while window *i* folds on the device, window
+*i+1*'s disk read, host-side padding, ELL plane packing and host->device
+transfer have not even started.  On a slow source that serializes I/O
+with compute and the fold is ingestion-bound, not compute-bound.
+
+:class:`PrefetchingWindowSource` wraps *any* ``WindowSource`` (in-memory
+``ChunkedEdgeList``, mmap ``.geeb`` readers, ``open_window_parallel``)
+with a small pipeline:
+
+* a **reader thread** walks the source in order and -- for
+  ``ChunkedEdgeList`` sources -- copies each window straight into a ring
+  of ``depth + 2`` *reused* staging buffers (one allocation per slot for
+  the life of the iterator, not one per window);
+* a bounded **worker pool** (``depth`` threads) runs the *stage*
+  callable on each filled window -- by default an eager
+  ``jax.device_put`` (+ ``block_until_ready``), optionally a per-window
+  ELL plane pack for the pallas sharded path -- so the host->device
+  copy for window *i+1* overlaps the donated-accumulator fold of
+  window *i*;
+* the consumer draws completed windows from a bounded FIFO queue, which
+  preserves the source's exact window order and propagates any worker
+  exception at the point of consumption.
+
+``depth`` bounds both the worker pool and the queue, so at most
+``depth + 2`` windows of host memory are ever staged.  ``depth=0`` (or
+:func:`prefetch_windows` resolving to 0) disables the pipeline entirely
+-- the fold runs the historical synchronous path.
+
+Observability (``repro.obs``): the consumer side wraps each dequeue in a
+``fold.prefetch_wait`` span and feeds the ``fold.prefetch_stall_ms``
+histogram + ``fold.prefetch.queue_depth`` gauge; the producer side emits
+``fold.prefetch_fill`` (reader) and ``fold.prefetch_stage`` (worker)
+spans, so a Perfetto trace shows fills running *under* the consumer's
+``fold.window`` compute spans instead of between them.
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Iterator, NamedTuple, Optional
+
+import numpy as np
+
+from repro.graph.containers import EdgeList, edge_list_from_numpy
+from repro.graph.io import ChunkedEdgeList
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+ENV_PREFETCH_WINDOWS = "REPRO_GEE_PREFETCH_WINDOWS"
+DEFAULT_PREFETCH_DEPTH = 2
+
+
+def resolve_prefetch_depth(depth: int | None = None) -> int:
+    """Effective prefetch depth: explicit value > env override > default.
+
+    ``depth=None`` consults ``REPRO_GEE_PREFETCH_WINDOWS`` and falls back
+    to :data:`DEFAULT_PREFETCH_DEPTH`.  Negative values clamp to 0
+    (synchronous).
+    """
+    if depth is None:
+        raw = os.environ.get(ENV_PREFETCH_WINDOWS, "").strip()
+        if raw:
+            try:
+                depth = int(raw)
+            except ValueError:
+                raise ValueError(
+                    f"{ENV_PREFETCH_WINDOWS}={raw!r} is not an integer")
+        else:
+            depth = DEFAULT_PREFETCH_DEPTH
+    return max(0, int(depth))
+
+
+class PlaneWindow(NamedTuple):
+    """A window already packed into ELL planes by a prefetch stage.
+
+    The pallas ``streamed_sharded`` consumer accepts these in place of an
+    ``EdgeList``: the host-side ``shard_edges_to_ell`` pack and the
+    host->device transfer both already happened on a worker thread.
+    """
+
+    num_edges: int
+    cols: object          # [P * n_pad, width] int32, device-resident
+    vals: object          # [P * n_pad, width] float32, device-resident
+
+
+class _Stop(Exception):
+    """Internal: consumer went away; reader/ring should unwind quietly."""
+
+
+def _default_stage(sharding=None) -> Callable[[EdgeList], EdgeList]:
+    """Stage that eagerly commits a window to the device (synchronously:
+    ``block_until_ready`` inside the worker, so the staging slot can be
+    reused the moment the stage returns)."""
+    import jax
+    import jax.numpy as jnp
+
+    def commit(x):
+        # Two constraints shape this:
+        # * CPU jax zero-copies suitably aligned host buffers, which
+        #   would alias the reused staging ring -- numpy inputs need an
+        #   owning copy first (np.array is a plain memcpy; jax then
+        #   wraps or transfers the copy and keeps it alive).
+        # * jnp.asarray(copy=True) and tuple-arg device_put lower to XLA
+        #   *computations*, and the CPU client runs those on the same
+        #   serial queue as the consumer's fold -- a worker-side commit
+        #   would block behind every in-flight fold step instead of
+        #   overlapping it.  Per-leaf transfers of a fresh numpy copy
+        #   stay off the compute queue.
+        if isinstance(x, np.ndarray):
+            x = np.array(x)
+        if sharding is not None:
+            return jax.device_put(x, sharding)
+        return jnp.asarray(x) if isinstance(x, np.ndarray) else x
+
+    def stage(w: EdgeList) -> EdgeList:
+        src, dst, weight = (commit(w.src), commit(w.dst), commit(w.weight))
+        jax.block_until_ready((src, dst, weight))
+        return EdgeList(src=src, dst=dst, weight=weight,
+                        num_nodes=w.num_nodes, num_edges=w.num_edges)
+
+    return stage
+
+
+class _StagingRing:
+    """Fixed pool of reused (src, dst, weight) numpy buffers.
+
+    The reader acquires a free slot, fills it, and hands it to a stage
+    task; the task *must* copy the data off-host-buffer (device_put,
+    plane pack, ...) and release the slot when done.  Blocking acquires
+    poll a stop event so shutdown can never deadlock on an abandoned
+    ring.
+    """
+
+    def __init__(self, slots: int, width: int):
+        self._free: queue.Queue[int] = queue.Queue()
+        self._bufs = []
+        for i in range(slots):
+            self._bufs.append((np.zeros(width, np.int32),
+                               np.zeros(width, np.int32),
+                               np.zeros(width, np.float32)))
+            self._free.put(i)
+
+    def acquire(self, stop: threading.Event) -> int:
+        while True:
+            if stop.is_set():
+                raise _Stop
+            try:
+                return self._free.get(timeout=0.05)
+            except queue.Empty:
+                continue
+
+    def release(self, slot: int) -> None:
+        self._free.put(slot)
+
+    def buffers(self, slot: int):
+        return self._bufs[slot]
+
+
+class PrefetchingWindowSource:
+    """Wrap a ``WindowSource`` so windows are read, packed and staged to
+    the device *ahead* of the consuming fold.
+
+    Satisfies the ``WindowSource`` protocol itself (metadata delegates to
+    the wrapped source), so it drops into ``stream_fold`` /
+    ``gee_streamed_sharded`` unchanged.  ``windows()`` yields exactly the
+    windows the wrapped source would yield, in the same order, each
+    transformed by ``stage`` (default: committed to the device via
+    ``jax.device_put`` with the optional ``sharding``).
+
+    The window object a custom ``stage`` receives may be backed by a
+    reused staging buffer -- it is valid only for the duration of the
+    stage call, which must copy the data onward (``device_put``, a plane
+    pack, ...) before returning.
+
+    ``depth=0`` applies the stage synchronously with no threads.
+    """
+
+    def __init__(self, source, depth: int = DEFAULT_PREFETCH_DEPTH, *,
+                 stage: Optional[Callable] = None, sharding=None):
+        self.source = source
+        self.depth = max(0, int(depth))
+        self._stage = stage if stage is not None else _default_stage(sharding)
+
+    # WindowSource protocol: metadata delegates to the wrapped source ------
+    @property
+    def num_nodes(self) -> int:
+        return self.source.num_nodes
+
+    @property
+    def undirected(self) -> bool:
+        return self.source.undirected
+
+    @property
+    def num_edges(self) -> int:
+        return self.source.num_edges
+
+    @property
+    def window_edges(self) -> int:
+        return self.source.window_edges
+
+    @property
+    def num_windows(self) -> int:
+        return self.source.num_windows
+
+    def windows(self, pad_to: int | None = None) -> Iterator:
+        if self.depth == 0:
+            return (self._stage(w) for w in self.source.windows(pad_to=pad_to))
+        return self._pipeline(pad_to)
+
+    # the pipeline ---------------------------------------------------------
+    def _pipeline(self, pad_to: int | None) -> Iterator:
+        depth = self.depth
+        stop = threading.Event()
+        out: queue.Queue = queue.Queue(maxsize=depth)
+        pool = ThreadPoolExecutor(max_workers=depth,
+                                  thread_name_prefix="gee-prefetch")
+        reader = threading.Thread(
+            target=self._read_loop, args=(pad_to, stop, out, pool),
+            name="gee-prefetch-reader", daemon=True)
+        reader.start()
+        tr = obs_trace.get_tracer()
+        reg = obs_metrics.get_registry()
+        stall = reg.histogram("fold.prefetch_stall_ms")
+        depth_gauge = reg.gauge("fold.prefetch.queue_depth")
+        idx = 0
+        try:
+            while True:
+                depth_gauge.set(out.qsize())
+                t0 = time.perf_counter()
+                with tr.span("fold.prefetch_wait", idx=idx, depth=depth):
+                    kind, item = out.get()
+                    if kind == "item":
+                        item = item.result()   # staged window (or worker exc)
+                if kind == "done":
+                    return
+                if kind == "error":
+                    raise item
+                stall.observe((time.perf_counter() - t0) * 1e3)
+                yield item
+                idx += 1
+        finally:
+            stop.set()
+            while True:                 # unblock a reader stuck in put()
+                try:
+                    out.get_nowait()
+                except queue.Empty:
+                    break
+            pool.shutdown(wait=True)
+            reader.join(timeout=10.0)
+
+    def _read_loop(self, pad_to, stop: threading.Event, out: queue.Queue,
+                   pool: ThreadPoolExecutor) -> None:
+        def put(envelope) -> bool:
+            while not stop.is_set():
+                try:
+                    out.put(envelope, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        try:
+            if isinstance(self.source, ChunkedEdgeList):
+                tasks = self._ring_tasks(pad_to, stop)
+            else:
+                tasks = self._generic_tasks(pad_to, stop)
+            for task in tasks:
+                if not put(("item", pool.submit(task))):
+                    raise _Stop
+            put(("done", None))
+        except _Stop:
+            pass
+        except BaseException as e:              # propagate at the consumer
+            put(("error", e))
+
+    def _ring_tasks(self, pad_to, stop):
+        """ChunkedEdgeList fast path: fill reused staging buffers directly
+        from the backing arrays (mmap page-ins land on the reader thread),
+        replicating ``chunks()`` semantics exactly -- same padding, same
+        all-padding-window skip, same single empty-graph window."""
+        ch = self.source
+        c = ch.effective_chunk_edges
+        pad = max(c, pad_to or 0)
+        n = ch.num_nodes
+        if ch.num_edges == 0:
+            def task_empty():
+                w = edge_list_from_numpy(
+                    np.empty(0, np.int32), np.empty(0, np.int32),
+                    np.empty(0, np.float32), n, pad_to=pad)
+                return self._run_stage(w)
+            yield task_empty
+            return
+        ring = _StagingRing(self.depth + 2, pad)
+        tr = obs_trace.get_tracer()
+        src_a, dst_a, w_a = ch.src, ch.dst, ch.weight
+        for lo in range(0, ch.num_edges, c):
+            hi = min(lo + c, ch.num_edges)
+            e = hi - lo
+            slot = ring.acquire(stop)
+            bs, bd, bw = ring.buffers(slot)
+            with tr.span("fold.prefetch_fill", lo=int(lo), edges=e):
+                bw[:e] = w_a[lo:hi]
+                if not bw[:e].any():
+                    ring.release(slot)
+                    continue           # all-padding window: exact no-op
+                bs[:e] = src_a[lo:hi]
+                bd[:e] = dst_a[lo:hi]
+                if e < pad:
+                    bs[e:] = 0
+                    bd[e:] = 0
+                    bw[e:] = 0.0
+
+            def task(slot=slot, e=e):
+                try:
+                    bs, bd, bw = ring.buffers(slot)
+                    w = EdgeList(src=bs, dst=bd, weight=bw,
+                                 num_nodes=n, num_edges=e)
+                    return self._run_stage(w)
+                finally:
+                    ring.release(slot)
+            yield task
+
+    def _generic_tasks(self, pad_to, stop):
+        """Any other WindowSource: iterate it on the reader thread (the
+        read cost still leaves the consumer's critical path) and stage
+        each fresh window on a worker."""
+        tr = obs_trace.get_tracer()
+        it = iter(self.source.windows(pad_to=pad_to))
+        i = 0
+        while True:
+            if stop.is_set():
+                raise _Stop
+            with tr.span("fold.prefetch_fill", idx=i):
+                try:
+                    w = next(it)
+                except StopIteration:
+                    return
+
+            def task(w=w):
+                return self._run_stage(w)
+            yield task
+            i += 1
+
+    def _run_stage(self, w):
+        with obs_trace.span("fold.prefetch_stage", edges=int(w.num_edges)):
+            return self._stage(w)
+
+
+class ThrottledWindowSource:
+    """A ``WindowSource`` wrapper that sleeps before yielding each window
+    -- a simulated slow disk for the overlap benchmarks and the order
+    determinism tests.  ``jitter_s`` adds a deterministic (seeded)
+    uniform extra delay per window."""
+
+    def __init__(self, source, delay_s: float = 0.0, jitter_s: float = 0.0,
+                 seed: int = 0):
+        self.source = source
+        self.delay_s = float(delay_s)
+        self.jitter_s = float(jitter_s)
+        self.seed = int(seed)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.source.num_nodes
+
+    @property
+    def undirected(self) -> bool:
+        return self.source.undirected
+
+    @property
+    def num_edges(self) -> int:
+        return self.source.num_edges
+
+    @property
+    def window_edges(self) -> int:
+        return self.source.window_edges
+
+    @property
+    def num_windows(self) -> int:
+        return self.source.num_windows
+
+    def windows(self, pad_to: int | None = None) -> Iterator[EdgeList]:
+        import random
+        rng = random.Random(self.seed)
+        for w in self.source.windows(pad_to=pad_to):
+            pause = self.delay_s
+            if self.jitter_s:
+                pause += rng.random() * self.jitter_s
+            if pause > 0:
+                time.sleep(pause)
+            yield w
+
+
+def prefetch_windows(source, depth: int | None = None, *,
+                     stage: Optional[Callable] = None, sharding=None):
+    """Wrap ``source`` for background prefetch; the synchronous source
+    comes back unchanged when the resolved depth is 0 or it is already
+    prefetching."""
+    depth = resolve_prefetch_depth(depth)
+    if depth <= 0 or isinstance(source, PrefetchingWindowSource):
+        return source
+    return PrefetchingWindowSource(source, depth, stage=stage,
+                                   sharding=sharding)
+
+
+__all__ = ["ENV_PREFETCH_WINDOWS", "DEFAULT_PREFETCH_DEPTH",
+           "resolve_prefetch_depth", "PrefetchingWindowSource",
+           "PlaneWindow", "ThrottledWindowSource", "prefetch_windows"]

@@ -48,6 +48,11 @@ def main(argv=None):
     ap.add_argument("--chunk-edges", type=int, default=None,
                     help="streaming window for --edge-file / chunked "
                          "backend (default 1M edges = 12 MB/chunk)")
+    ap.add_argument("--prefetch-windows", type=int, default=None,
+                    help="windows staged ahead by background threads for "
+                         "the streaming backends (default: "
+                         "REPRO_GEE_PREFETCH_WINDOWS or 2; 0 = "
+                         "synchronous reads)")
     ap.add_argument("--classes", type=int, default=5,
                     help="synthetic label count when --edge-file has no "
                          "labels sidecar")
@@ -107,14 +112,17 @@ def main(argv=None):
               f"K={k} windows={chunked.num_windows}"
               f"x{chunked.window_edges} "
               f"[{opts.tag()}]")
+        pf = args.prefetch_windows
         cells = []
         if args.backend != "streamed_sharded" or args.compare:
             cells.append(("chunked",
-                          lambda: gee_chunked(chunked, labels, k, opts)))
+                          lambda: gee_chunked(chunked, labels, k, opts,
+                                              prefetch_windows=pf)))
         if streamed:
             cells.append((f"streamed x{jax.device_count()}",
                           lambda: gee_streamed_sharded(chunked, labels, k,
-                                                       opts)))
+                                                       opts,
+                                                       prefetch_windows=pf)))
         for name, fn in cells:
             dt = _time(fn)
             z = np.asarray(fn())
@@ -156,14 +164,16 @@ def main(argv=None):
         plan = None
         if args.plan:
             plan = GEEPlan.build(prep, k, opts, backend=b,
-                                 chunk_edges=args.chunk_edges)
+                                 chunk_edges=args.chunk_edges,
+                                 prefetch_windows=args.prefetch_windows)
             if not args.trace:
                 print("\n".join("  " + ln for ln in
                                 plan.describe().splitlines()))
         if b == "chunked" and args.chunk_edges:
             from repro.core.chunked import gee_chunked
             fn = lambda: gee_chunked(prep.chunked(args.chunk_edges),
-                                     labels, k, opts)
+                                     labels, k, opts,
+                                     prefetch_windows=args.prefetch_windows)
         elif plan is not None:
             # Execute through the printed plan so --trace populates its
             # per-stage timings (describe(timings=True) below).

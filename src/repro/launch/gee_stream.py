@@ -108,10 +108,18 @@ def main(argv=None):
     ap.add_argument("--recover", action="store_true",
                     help="resume from the newest snapshot in --snapshot-dir "
                          "(+ WAL replay) instead of starting fresh")
+    ap.add_argument("--prefetch-windows", type=int, default=None,
+                    help="sets REPRO_GEE_PREFETCH_WINDOWS for this process: "
+                         "windows staged ahead by any streamed fold it runs "
+                         "(0 = synchronous reads)")
     obs_cli.add_flags(ap)
     args = ap.parse_args(argv)
     if args.recover and not args.snapshot_dir:
         ap.error("--recover requires --snapshot-dir")
+    if args.prefetch_windows is not None:
+        import os
+        from repro.graph.prefetch import ENV_PREFETCH_WINDOWS
+        os.environ[ENV_PREFETCH_WINDOWS] = str(args.prefetch_windows)
     obs_cli.setup(args)
 
     st = prepare_stream(args)

@@ -1,0 +1,281 @@
+"""The prefetching pipeline (repro/graph/prefetch.py): equivalence with
+the synchronous fold across every option setting and source kind, worker
+exception propagation, clean early-exit shutdown, depth=0 passthrough,
+order determinism under a jittered slow source, knob resolution, and the
+trace-level overlap guarantee."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.chunked import gee_chunked
+from repro.core.fold import gee_streamed_sharded
+from repro.core.gee import ALL_OPTION_SETTINGS, GEEOptions, gee_sparse_jax
+from repro.core.plan import GEEPlan
+from repro.graph.containers import edge_list_from_numpy, symmetrize
+from repro.graph.io import ChunkedEdgeList, open_edge_list, save_edge_list
+from repro.graph.prefetch import (DEFAULT_PREFETCH_DEPTH,
+                                  ENV_PREFETCH_WINDOWS,
+                                  PrefetchingWindowSource,
+                                  ThrottledWindowSource, prefetch_windows,
+                                  resolve_prefetch_depth)
+from repro.obs.metrics import MetricsRegistry, set_registry
+from repro.obs.trace import Tracer, set_tracer
+
+OPTS_ALL = GEEOptions(laplacian=True, diag_aug=True, correlation=True)
+
+
+def _graph(n=120, e=701, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = (src + 1 + rng.integers(0, n - 1, e)) % n
+    w = (rng.random(e) + 0.1).astype(np.float32)
+    edges = symmetrize(edge_list_from_numpy(src, dst, w, n))
+    labels = rng.integers(0, 4, n).astype(np.int32)
+    labels[rng.random(n) < 0.2] = -1
+    return edges, labels
+
+
+def _source(kind, edges, tmp_path, chunk_edges=97):
+    ch = ChunkedEdgeList.from_edge_list(edges, chunk_edges)
+    if kind == "inmem":
+        return ch
+    path = str(tmp_path / "g.geeb")
+    save_edge_list(path, ch)
+    return open_edge_list(path, chunk_edges=chunk_edges)
+
+
+def _no_prefetch_threads():
+    return not any(t.name.startswith("gee-prefetch")
+                   for t in threading.enumerate())
+
+
+@pytest.fixture
+def fresh_obs():
+    tracer = Tracer(enabled=False, annotate_device=False)
+    registry = MetricsRegistry()
+    prev_t, prev_r = set_tracer(tracer), set_registry(registry)
+    try:
+        yield tracer, registry
+    finally:
+        set_tracer(prev_t)
+        set_registry(prev_r)
+
+
+# ---------------------------------------------------------------------------
+# equivalence: prefetched == synchronous == reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["inmem", "geeb"])
+@pytest.mark.parametrize("opts", ALL_OPTION_SETTINGS, ids=lambda o: o.tag())
+def test_prefetched_equals_synchronous(tmp_path, kind, opts):
+    edges, labels = _graph()
+    ch = _source(kind, edges, tmp_path)
+    z_sync = np.asarray(gee_chunked(ch, labels, 4, opts,
+                                    prefetch_windows=0))
+    z_pref = np.asarray(gee_chunked(ch, labels, 4, opts,
+                                    prefetch_windows=3))
+    z_ref = np.asarray(gee_sparse_jax(edges, labels, 4, opts))
+    assert np.abs(z_sync - z_pref).max() <= 1e-5
+    assert np.abs(z_pref - z_ref).max() <= 1e-5
+    assert _no_prefetch_threads()
+
+
+@pytest.mark.parametrize("local_backend", ["segment_sum", "pallas"])
+def test_streamed_sharded_prefetch_equivalence(local_backend):
+    edges, labels = _graph()
+    ch = ChunkedEdgeList.from_edge_list(edges, 97)
+    z0 = np.asarray(gee_streamed_sharded(ch, labels, 4, OPTS_ALL,
+                                         local_backend=local_backend,
+                                         prefetch_windows=0))
+    z2 = np.asarray(gee_streamed_sharded(ch, labels, 4, OPTS_ALL,
+                                         local_backend=local_backend,
+                                         prefetch_windows=2))
+    assert np.abs(z0 - z2).max() <= 1e-5
+    assert _no_prefetch_threads()
+
+
+def test_reused_staging_buffers_never_alias_device_arrays():
+    # fold CPU jax may zero-copy host buffers; the staged windows must own
+    # their memory so ring-slot reuse cannot corrupt earlier windows
+    edges, _ = _graph()
+    ch = ChunkedEdgeList.from_edge_list(edges, 97)
+    ref = list(ch.chunks())
+    got = list(PrefetchingWindowSource(ch, depth=3).windows())
+    assert len(got) == len(ref)
+    for a, b in zip(ref, got):
+        assert a.num_edges == b.num_edges
+        for f in ("src", "dst", "weight"):
+            assert (np.asarray(getattr(a, f))
+                    == np.asarray(getattr(b, f))).all()
+
+
+# ---------------------------------------------------------------------------
+# failure modes + lifecycle
+# ---------------------------------------------------------------------------
+
+class _BoomSource:
+    """WindowSource whose iterator dies mid-stream."""
+
+    def __init__(self, inner, after: int):
+        self.inner, self.after = inner, after
+
+    num_nodes = property(lambda self: self.inner.num_nodes)
+    undirected = property(lambda self: self.inner.undirected)
+    num_edges = property(lambda self: self.inner.num_edges)
+    window_edges = property(lambda self: self.inner.window_edges)
+    num_windows = property(lambda self: self.inner.num_windows)
+
+    def windows(self, pad_to=None):
+        for i, w in enumerate(self.inner.windows(pad_to=pad_to)):
+            if i == self.after:
+                raise RuntimeError("disk went away")
+            yield w
+
+
+def test_source_exception_propagates_to_consumer():
+    edges, _ = _graph()
+    ch = ChunkedEdgeList.from_edge_list(edges, 97)
+    pf = PrefetchingWindowSource(_BoomSource(ch, after=2), depth=2)
+    with pytest.raises(RuntimeError, match="disk went away"):
+        list(pf.windows())
+    assert _no_prefetch_threads()
+
+
+def test_stage_exception_propagates_to_consumer():
+    edges, _ = _graph()
+    ch = ChunkedEdgeList.from_edge_list(edges, 97)
+
+    def bad_stage(w):
+        raise ValueError("pack failed")
+
+    pf = PrefetchingWindowSource(ch, depth=2, stage=bad_stage)
+    with pytest.raises(ValueError, match="pack failed"):
+        list(pf.windows())
+    assert _no_prefetch_threads()
+
+
+def test_early_consumer_exit_shuts_down_cleanly():
+    edges, _ = _graph()
+    ch = ChunkedEdgeList.from_edge_list(edges, 49)   # plenty of windows
+    pf = PrefetchingWindowSource(ch, depth=2)
+    it = pf.windows()
+    next(it)
+    next(it)
+    it.close()                        # consumer abandons the fold mid-stream
+    deadline = time.monotonic() + 10.0
+    while not _no_prefetch_threads() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert _no_prefetch_threads()     # no leaked reader/worker threads
+
+
+def test_depth_zero_is_passthrough():
+    edges, _ = _graph()
+    ch = ChunkedEdgeList.from_edge_list(edges, 97)
+    assert prefetch_windows(ch, 0) is ch
+    # direct construction at depth=0 stays threadless but still stages
+    got = list(PrefetchingWindowSource(ch, depth=0).windows())
+    ref = list(ch.chunks())
+    assert [int(w.num_edges) for w in got] == [int(w.num_edges) for w in ref]
+    assert _no_prefetch_threads()
+    # an already-prefetching source is not double-wrapped
+    pf = PrefetchingWindowSource(ch, depth=2)
+    assert prefetch_windows(pf, 3) is pf
+
+
+# ---------------------------------------------------------------------------
+# order determinism under a jittered slow source
+# ---------------------------------------------------------------------------
+
+def test_order_deterministic_under_jittered_source():
+    edges, _ = _graph()
+    ch = ChunkedEdgeList.from_edge_list(edges, 49)
+    slow = ThrottledWindowSource(ch, delay_s=0.0, jitter_s=0.004, seed=1)
+    ref = [(int(w.num_edges), float(np.asarray(w.weight).sum()))
+           for w in ch.chunks()]
+    for _ in range(3):                # jittered worker timing each run
+        got = [(int(w.num_edges), float(np.asarray(w.weight).sum()))
+               for w in PrefetchingWindowSource(slow, depth=3).windows()]
+        assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# knob resolution + plan surface
+# ---------------------------------------------------------------------------
+
+def test_depth_resolution(monkeypatch):
+    monkeypatch.delenv(ENV_PREFETCH_WINDOWS, raising=False)
+    assert resolve_prefetch_depth(None) == DEFAULT_PREFETCH_DEPTH
+    assert resolve_prefetch_depth(5) == 5
+    assert resolve_prefetch_depth(-3) == 0
+    monkeypatch.setenv(ENV_PREFETCH_WINDOWS, "7")
+    assert resolve_prefetch_depth(None) == 7
+    assert resolve_prefetch_depth(1) == 1          # explicit beats env
+    monkeypatch.setenv(ENV_PREFETCH_WINDOWS, "0")
+    edges, _ = _graph()
+    ch = ChunkedEdgeList.from_edge_list(edges, 97)
+    assert prefetch_windows(ch) is ch              # env can force sync
+    monkeypatch.setenv(ENV_PREFETCH_WINDOWS, "nope")
+    with pytest.raises(ValueError, match="not an integer"):
+        resolve_prefetch_depth(None)
+
+
+def test_plan_resolves_and_describes_prefetch(monkeypatch):
+    monkeypatch.delenv(ENV_PREFETCH_WINDOWS, raising=False)
+    edges, labels = _graph()
+    plan = GEEPlan.build(edges, 4, OPTS_ALL, backend="chunked",
+                         chunk_edges=97, prefetch_windows=4)
+    assert plan.prefetch_windows == 4
+    assert "prefetch=4" in plan.describe()
+    monkeypatch.setenv(ENV_PREFETCH_WINDOWS, "6")
+    plan_env = GEEPlan.build(edges, 4, OPTS_ALL, backend="chunked",
+                             chunk_edges=97)
+    assert plan_env.prefetch_windows == 6
+    # non-streaming backends have no prefetch stage to describe
+    plan_mem = GEEPlan.build(edges, 4, OPTS_ALL, backend="sparse_jax")
+    assert plan_mem.prefetch_windows is None
+    assert "prefetch" not in plan_mem.describe()
+    # the resolved plan executes and matches the reference
+    z = np.asarray(plan.execute(labels))
+    z_ref = np.asarray(gee_sparse_jax(edges, labels, 4, OPTS_ALL))
+    assert np.abs(z - z_ref).max() <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# observability: stall accounting + the overlap guarantee
+# ---------------------------------------------------------------------------
+
+def test_prefetch_spans_and_metrics(fresh_obs):
+    tracer, reg = fresh_obs
+    tracer.enable()
+    edges, labels = _graph()
+    ch = ChunkedEdgeList.from_edge_list(edges, 97)
+    gee_chunked(ch, labels, 4, OPTS_ALL, prefetch_windows=2)
+    names = {e.name for e in tracer.events()}
+    assert {"fold.prefetch_wait", "fold.prefetch_fill",
+            "fold.prefetch_stage", "fold.window"} <= names
+    snap = reg.snapshot()
+    assert snap["histograms"]["fold.prefetch_stall_ms"]["count"] > 0
+    assert "fold.prefetch.queue_depth" in snap["gauges"]
+
+
+def test_trace_shows_fill_overlapping_compute(fresh_obs):
+    tracer, _reg = fresh_obs
+    tracer.enable()
+    edges, labels = _graph(n=200, e=4000)
+    ch = ChunkedEdgeList.from_edge_list(edges, 256)
+    slow = ThrottledWindowSource(ch, delay_s=0.003)
+    gee_chunked(slow, labels, 4, OPTS_ALL, prefetch_windows=2)
+    fills = [e for e in tracer.events() if e.name == "fold.prefetch_fill"]
+    folds = [e for e in tracer.events() if e.name == "fold.window"]
+    assert fills and folds
+
+    def overlaps(a, b):
+        return (a.tid != b.tid and a.ts_us < b.ts_us + b.dur_us
+                and b.ts_us < a.ts_us + a.dur_us)
+
+    # background reads run concurrently with consumer-side fold compute:
+    # some fill span on a worker/reader thread overlaps a fold.window span
+    assert any(overlaps(f, w) for f in fills for w in folds)
